@@ -1,0 +1,43 @@
+"""§V-C microbench — the configurable-datapath PE claim in numbers:
+half-precision mode must cost ~half the MAC work of full-precision mode.
+
+On CPU (interpret) we measure wall time AND verify the structural 2× via
+`ref_flops`; on a real TPU the same harness times the Mosaic kernel.
+"""
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+import jax
+
+from benchmarks.common import emit, time_fn
+
+from repro.kernels.fxp_matmul.ops import fxp_dense
+from repro.kernels.fxp_matmul.ref import ref_flops
+
+SHAPES = [(256, 400, 300), (512, 1024, 1024), (64, 17, 400)]
+
+
+def main(argv=None):
+    for (m, k, n) in SHAPES:
+        x = jax.random.normal(jax.random.key(0), (m, k))
+        w = jax.random.normal(jax.random.key(1), (k, n)) * 0.1
+        res = {}
+        for mode, fp in (("full", True), ("half", False)):
+            us = time_fn(lambda fp=fp: fxp_dense(x, w, None,
+                                                 full_precision=fp),
+                         iters=5, warmup=2)
+            fl = ref_flops(m, n, k, fp)
+            res[mode] = (us, fl)
+            emit(f"kernel/fxp_dense/{m}x{k}x{n}/{mode}", us,
+                 f"model_flops={fl:.3e};gflops={fl/us*1e-3:.2f}")
+        ratio = res["full"][1] / res["half"][1]
+        emit(f"kernel/fxp_dense/{m}x{k}x{n}/flop_ratio", 0.0,
+             f"full_vs_half={ratio:.1f}x (paper claims 2x)")
+
+
+if __name__ == "__main__":
+    main()

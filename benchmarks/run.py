@@ -1,0 +1,49 @@
+"""Benchmark runner — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV lines (harness contract).
+
+Full runs write JSON artifacts under results/bench/; `--quick` shrinks the
+step counts so the whole suite finishes in a few minutes on CPU.
+"""
+import pathlib
+import sys
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+import argparse
+import sys
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced step counts (CI-scale)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: fig7,fig8,fig9,fig10,"
+                         "tableii,kernel")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
+                            fig10_accelerator, kernel_bench, tableii_compare)
+
+    if want("kernel"):
+        kernel_bench.main([])
+    if want("fig8"):
+        fig8_throughput.main(["--steps", "400" if args.quick else "2000"])
+    if want("fig9"):
+        fig9_breakdown.main(["--steps", "60" if args.quick else "200"])
+    if want("fig10"):
+        fig10_accelerator.main(["--iters", "5" if args.quick else "10"])
+    if want("tableii"):
+        tableii_compare.main([])
+    if want("fig7"):
+        fig7_accuracy.main(["--steps", "3000" if args.quick else "25000"])
+
+
+if __name__ == "__main__":
+    main()

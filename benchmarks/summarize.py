@@ -1,0 +1,67 @@
+"""Build the EXPERIMENTS.md §Dry-run and §Roofline tables from results/."""
+import json
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+
+
+def load(d):
+    out = {}
+    for f in sorted(d.glob("*.json")):
+        rec = json.loads(f.read_text())
+        out[(rec["arch"], rec["shape"], rec.get("mesh", ""))] = rec
+    return out
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b/2**30:.2f}GiB"
+
+
+def dryrun_table():
+    recs = load(REPO / "results" / "dryrun")
+    lines = ["| arch | shape | mesh | status | compile_s | HLO flops/dev | bytes/dev | peak mem/dev | collectives |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, m), r in sorted(recs.items()):
+        if r["status"] == "ok":
+            coll = ",".join(f"{k}:{v:.1e}" for k, v in
+                            sorted(r.get("collective_bytes", {}).items()))
+            mem = r.get("memory", {})
+            lines.append(
+                f"| {a} | {s} | {m} | ok | {r['compile_s']} | "
+                f"{r['flops']:.2e} | {r['bytes_accessed']:.2e} | "
+                f"{fmt_bytes(mem.get('peak_bytes'))} | {coll} |")
+        else:
+            lines.append(f"| {a} | {s} | {m} | {r['status']} | - | - | - | - | "
+                         f"{r.get('skip_reason', r.get('error', ''))[:60]} |")
+    return "\n".join(lines)
+
+
+def roofline_table(tag="baseline"):
+    recs = load(REPO / "results" / "roofline" / tag)
+    lines = ["| arch | shape | compute_s | memory_s | collective_s | bottleneck | bound step_s | MODEL_FLOPS | useful ratio |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for (a, s, _), r in sorted(recs.items()):
+        if r["status"] == "ok":
+            lines.append(
+                f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                f"{r['collective_s']:.4f} | **{r['bottleneck']}** | "
+                f"{r['step_time_bound_s']:.4f} | {r['model_flops_global']:.2e} | "
+                f"{r['useful_flops_ratio']:.3f} |")
+        else:
+            lines.append(f"| {a} | {s} | - | - | - | {r['status']} | - | - | "
+                         f"{r.get('skip_reason', r.get('error', ''))[:60]} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("## §Dry-run\n")
+        print(dryrun_table())
+    if which in ("all", "roofline"):
+        tag = sys.argv[2] if len(sys.argv) > 2 else "baseline"
+        print(f"\n## §Roofline ({tag})\n")
+        print(roofline_table(tag))

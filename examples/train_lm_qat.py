@@ -1,0 +1,37 @@
+"""Train a ~100M LM with the FIXAR technique as a first-class feature:
+fixed-point weight/gradient memories + dynamic activation quantization,
+checkpointing included — the end-to-end driver (deliverable b).
+
+    PYTHONPATH=src python examples/train_lm_qat.py          # ~100M, slow CPU
+    PYTHONPATH=src python examples/train_lm_qat.py --smoke  # tiny, seconds
+"""
+import pathlib
+import sys
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+
+import argparse
+
+from repro.launch import train as train_driver
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+    argv = [
+        "--arch", "demo_100m",
+        "--steps", "60" if args.smoke else "300",
+        "--batch", "4" if args.smoke else "2",
+        "--seq", "64" if args.smoke else "256",
+        "--qat", "--qat-delay", "30" if args.smoke else "150",
+        "--ckpt-dir", "/tmp/fixar_lm_ckpt", "--ckpt-every", "50",
+        "--log-every", "10",
+    ]
+    if args.smoke:
+        argv.append("--smoke")
+    train_driver.main(argv)
+
+
+if __name__ == "__main__":
+    main()

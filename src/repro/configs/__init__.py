@@ -1,0 +1,1 @@
+from repro.configs.registry import ALIASES, ARCH_IDS, get, get_smoke, lm_archs

@@ -1,0 +1,285 @@
+"""Fixed-point (Qm.f) arithmetic simulated in JAX.
+
+FIXAR trains DDPG entirely in two's-complement fixed point:
+
+  * fxp32 = Q15.16  — weights, gradients, and activations before the
+    quantization delay.  16 fractional bits give resolution 2^-16 ≈ 1.5e-5
+    and range ±32768, comfortably covering DDPG weight/activation/gradient
+    distributions (|x| < 100 in practice).
+  * fxp16 — activations after the quantization delay, affine-quantized with
+    the ranges monitored during the full-precision phase (Algorithm 1).
+
+Simulation strategy
+-------------------
+We carry fixed-point values in ``int32`` arrays ("raw" representation) and
+perform MACs in fp32/int64-safe ways:
+
+  * ``int32 raw * int32 raw -> int64`` is exact; sums of K such products fit
+    int64 for K < 2^62 / 2^62 ... obviously not — instead the *limb* path is
+    used (see kernels/fxp_matmul): each 32-bit activation is split into two
+    16-bit limbs and every partial product fits 47 bits, so fp64 (53-bit
+    mantissa) and int64 accumulation are both exact.  The pure-jnp reference
+    here uses int64 accumulation directly, which is exact for
+    K·2^47 < 2^63 ⇒ K < 65536 MACs per output — all FIXAR layers (K ≤ 421)
+    and all test shapes satisfy this.
+
+  * "Dequantized view": ``raw * 2^-frac`` as float32.  All *model semantics*
+    (losses, rewards) are evaluated on the dequantized view; all *storage and
+    arithmetic* is on raw int32.
+
+Two idioms are exposed:
+
+  * a raw API (`quantize`, `dequantize`, `fxp_mul`, ...) used by the kernels
+    and the bit-exact tests, and
+  * a "fake-quantization" API (`fake_quant`) used inside differentiable
+    training graphs — values stay float32 but are rounded onto the fixed-point
+    lattice with a straight-through estimator (STE), which is the standard
+    QAT formulation and is numerically identical to the raw path (proved in
+    tests/test_fixedpoint.py::test_fake_quant_matches_raw).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# Q-format descriptors
+# ---------------------------------------------------------------------------
+
+
+@jax.tree_util.register_static
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Two's-complement Qm.f fixed-point format.
+
+    total_bits includes the sign bit: value = raw * 2**-frac_bits with
+    raw ∈ [-2**(total_bits-1), 2**(total_bits-1) - 1].
+    """
+
+    total_bits: int
+    frac_bits: int
+
+    @property
+    def int_bits(self) -> int:  # sign excluded
+        return self.total_bits - 1 - self.frac_bits
+
+    @property
+    def scale(self) -> float:
+        return float(2.0 ** (-self.frac_bits))
+
+    @property
+    def raw_min(self) -> int:
+        return -(2 ** (self.total_bits - 1))
+
+    @property
+    def raw_max(self) -> int:
+        return 2 ** (self.total_bits - 1) - 1
+
+    @property
+    def min_value(self) -> float:
+        return self.raw_min * self.scale
+
+    @property
+    def max_value(self) -> float:
+        return self.raw_max * self.scale
+
+    def __repr__(self) -> str:  # Q15.16 style
+        return f"Q{self.int_bits}.{self.frac_bits}"
+
+
+# The formats FIXAR uses (fxp32 weights/grads/early activations; Q7.8 is the
+# *static* 16-bit lattice used in ablations — the paper's post-delay 16-bit
+# activations use the *affine* scheme below instead).
+FXP32 = QFormat(total_bits=32, frac_bits=16)  # Q15.16
+FXP16 = QFormat(total_bits=16, frac_bits=8)   # Q7.8
+
+
+# ---------------------------------------------------------------------------
+# Raw (int carrier) API
+# ---------------------------------------------------------------------------
+
+
+def quantize(x: Array, fmt: QFormat) -> Array:
+    """float -> raw fixed-point (int32 carrier), round-to-nearest-even, saturating."""
+    scaled = jnp.asarray(x, jnp.float32) * (2.0 ** fmt.frac_bits)
+    r = jnp.clip(jnp.round(scaled), fmt.raw_min, fmt.raw_max)
+    return r.astype(jnp.int32)
+
+
+def dequantize(raw: Array, fmt: QFormat) -> Array:
+    """raw fixed-point -> float32 view."""
+    return raw.astype(jnp.float32) * jnp.float32(fmt.scale)
+
+
+def saturate(raw: Array, fmt: QFormat) -> Array:
+    return jnp.clip(raw, fmt.raw_min, fmt.raw_max).astype(jnp.int32)
+
+
+def _x64() -> bool:
+    """True when 64-bit dtypes are live (tests wrap raw-path checks in
+    ``jax.enable_x64(True)``; without it the raw path falls back to exact
+    float32 value-space math, valid while |value·2^frac| < 2^24 — always true
+    for FIXAR's DDPG workload, asserted in tests)."""
+    return jnp.zeros((), jnp.int64).dtype == jnp.dtype("int64")
+
+
+def fxp_add(a: Array, b: Array, fmt: QFormat) -> Array:
+    """Saturating fixed-point add (same format)."""
+    if _x64():
+        s = a.astype(jnp.int64) + b.astype(jnp.int64)
+    else:
+        s = a.astype(jnp.float32) + b.astype(jnp.float32)
+    return jnp.clip(s, fmt.raw_min, fmt.raw_max).astype(jnp.int32)
+
+
+def fxp_mul(a: Array, b: Array, fmt_a: QFormat, fmt_b: QFormat, out: QFormat) -> Array:
+    """Saturating fixed-point multiply with re-scaling to `out` format.
+
+    (a·2^-fa)(b·2^-fb) = ab·2^-(fa+fb); shift to out.frac_bits with
+    round-half-up on the discarded bits (matches the FPGA's truncate+round).
+    Exact in the int64 path; the no-x64 fallback is exact while the product
+    fits 53 bits (float64 unavailable -> we emulate with two f32 limbs).
+    """
+    shift = fmt_a.frac_bits + fmt_b.frac_bits - out.frac_bits
+    if _x64():
+        prod = a.astype(jnp.int64) * b.astype(jnp.int64)  # exact in int64
+        if shift > 0:
+            prod = (prod + (jnp.int64(1) << (shift - 1))) >> shift
+        elif shift < 0:
+            prod = prod << (-shift)
+        return jnp.clip(prod, out.raw_min, out.raw_max).astype(jnp.int32)
+    # f32 fallback — limb-split a into hi/lo 12-bit pieces so each partial
+    # product stays within the 24-bit mantissa (|b| < 2^24 assumed).
+    a_hi = (a >> 12).astype(jnp.float32) * 4096.0
+    a_lo = (a & 0xFFF).astype(jnp.float32)
+    bf = b.astype(jnp.float32)
+    prod = a_hi * bf + a_lo * bf
+    prod = jnp.floor(prod * (2.0 ** -shift) + 0.5)
+    return jnp.clip(prod, out.raw_min, out.raw_max).astype(jnp.int32)
+
+
+def fxp_matmul_raw(a_raw: Array, w_raw: Array, fmt_a: QFormat, fmt_w: QFormat,
+                   out: QFormat) -> Array:
+    """Reference fixed-point matmul on raw carriers: (..., K) @ (K, N).
+
+    Accumulates exactly in int64 (valid while K < 2^15 — asserted), then
+    rescales once at the end, exactly like the AAP core's accumulator +
+    single output-stage shifter.  Int64 requires x64 mode; otherwise we
+    compute on the dequantized f32 view (exact while partial sums < 2^24,
+    the FIXAR operating envelope).
+    """
+    k = a_raw.shape[-1]
+    assert k < (1 << 15), f"int64 accumulation exactness bound exceeded: K={k}"
+    shift = fmt_a.frac_bits + fmt_w.frac_bits - out.frac_bits
+    if _x64():
+        acc = jnp.matmul(a_raw.astype(jnp.int64), w_raw.astype(jnp.int64),
+                         preferred_element_type=jnp.int64)
+        if shift > 0:
+            acc = (acc + (jnp.int64(1) << (shift - 1))) >> shift
+        elif shift < 0:
+            acc = acc << (-shift)
+        return jnp.clip(acc, out.raw_min, out.raw_max).astype(jnp.int32)
+    acc = jnp.matmul(a_raw.astype(jnp.float32), w_raw.astype(jnp.float32))
+    acc = jnp.floor(acc * (2.0 ** -shift) + 0.5)
+    return jnp.clip(acc, out.raw_min, out.raw_max).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Affine (range-monitored) quantization — Algorithm 1's Q_n
+# ---------------------------------------------------------------------------
+
+
+def affine_params(a_min: Array, a_max: Array, n_bits: int) -> tuple[Array, Array]:
+    """FIXAR's Q_n parameters: delta = (|A_min|+|A_max|)/2^n, z = round(-A_min/delta).
+
+    Two deviations from the paper's formulas, both standard (Jacob et al.):
+      * the paper writes z = floor(-A_min/2^n) — dimensionally a typo; the
+        affine zero-point divides by delta;
+      * we use 2^n - 1 (number of code INTERVALS) instead of 2^n: with 2^n
+        the top-of-range value and the zero-point of an all-negative range
+        land one code outside [0, 2^n - 1] and get clipped, breaking the
+        zero-exactness ReLU depends on (tests/test_fixedpoint.py::
+        test_affine_contains_zero caught this).  Costs one code point of
+        dynamic range.
+    """
+    a_min = jnp.minimum(a_min, 0.0)  # affine grid must contain 0 exactly
+    a_max = jnp.maximum(a_max, 0.0)
+    span = jnp.abs(a_min) + jnp.abs(a_max)
+    delta = jnp.where(span > 0, span / (2.0 ** n_bits - 1.0),
+                      1.0).astype(jnp.float32)
+    z = jnp.round(-a_min / delta).astype(jnp.int32)
+    return delta, z
+
+
+def affine_quantize(x: Array, delta: Array, z: Array, n_bits: int) -> Array:
+    """x -> unsigned n-bit code (int32 carrier): q = clip(round(x/delta) + z)."""
+    q = jnp.round(jnp.asarray(x, jnp.float32) / delta).astype(jnp.int32) + z
+    return jnp.clip(q, 0, (1 << n_bits) - 1)
+
+
+def affine_dequantize(q: Array, delta: Array, z: Array) -> Array:
+    return (q - z).astype(jnp.float32) * delta
+
+
+# ---------------------------------------------------------------------------
+# Fake quantization with straight-through estimator (training-graph idiom)
+# ---------------------------------------------------------------------------
+
+
+@jax.custom_vjp
+def _ste_round(x: Array) -> Array:
+    return jnp.round(x)
+
+
+def _ste_round_fwd(x):
+    return jnp.round(x), None
+
+
+def _ste_round_bwd(_, g):
+    return (g,)
+
+
+_ste_round.defvjp(_ste_round_fwd, _ste_round_bwd)
+
+
+def fake_quant(x: Array, fmt: QFormat) -> Array:
+    """Project x onto the Qm.f lattice, STE gradient (identity inside range).
+
+    Bit-exact to quantize->dequantize (same rounding, same saturation).
+    """
+    scale = jnp.float32(2.0 ** fmt.frac_bits)
+    scaled = jnp.clip(x * scale, jnp.float32(fmt.raw_min), jnp.float32(fmt.raw_max))
+    return _ste_round(scaled) * jnp.float32(fmt.scale)
+
+
+def fake_quant_affine(x: Array, a_min: Array, a_max: Array, n_bits: int) -> Array:
+    """Algorithm-1 activation quantization as a differentiable fake-quant.
+
+    Clip range gradient is STE-identity inside [a_min, a_max], zero outside
+    (standard QAT clipping behaviour).
+    """
+    delta, z = affine_params(a_min, a_max, n_bits)
+    lo = -z.astype(jnp.float32) * delta
+    hi = ((1 << n_bits) - 1 - z).astype(jnp.float32) * delta
+    xc = jnp.clip(x, lo, hi)
+    return _ste_round(xc / delta) * delta
+
+
+def quantization_error_bound(fmt: QFormat) -> float:
+    """Half-ULP bound for round-to-nearest within range."""
+    return 0.5 * fmt.scale
+
+
+__all__ = [
+    "QFormat", "FXP32", "FXP16",
+    "quantize", "dequantize", "saturate",
+    "fxp_add", "fxp_mul", "fxp_matmul_raw",
+    "affine_params", "affine_quantize", "affine_dequantize",
+    "fake_quant", "fake_quant_affine", "quantization_error_bound",
+]

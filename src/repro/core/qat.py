@@ -1,0 +1,153 @@
+"""Quantization-Aware Training for DRL — FIXAR Algorithm 1, in JAX.
+
+    Input: quantization bit n, quantization delay d
+    for t = 1..T:
+        if t < d:
+            activations fxp32, weights fxp32
+            monitor A_min, A_max of activations
+        else:
+            activations quantized to 16-bit with the captured ranges
+            (weights and gradients stay fxp32 the whole run)
+
+The state machine below is jit-compatible: the precision flip is a
+`jnp.where` on the step counter, so one compiled `train_step` serves the
+whole run — the TPU analogue of the AAP core's *configurable datapath*
+(one engine, two precisions, flipped by a register).
+
+Usage in a model:
+
+    qat = QATState.init(delay=400_000, n_bits=16, sites=[...])
+    ...
+    x = qat_site(qat, "actor/fc1_in", x)   # inside the forward pass
+    ...
+    qat = qat.tick()                       # once per optimizer step
+
+`qat_site` does three things in one fused op:
+  * full-precision phase: project x onto the fxp32 lattice (Q15.16) and fold
+    its min/max into the running ranges;
+  * quantized phase: fake-quantize x onto the n-bit affine lattice built from
+    the captured ranges (STE gradient);
+  * always returns float32 carriers so the surrounding graph stays
+    differentiable; bit-exactness versus the raw int path is covered by
+    tests/test_fixedpoint.py.
+
+Functional-update note: inside a jitted step the range tree must be threaded
+explicitly — `qat_site` returns (x, new_stat) via the `collect` helper; see
+`QATContext` which hides the plumbing.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.core.ranges import RangeStat, finalized, init_ranges, update_ema, update_minmax
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QATConfig:
+    """Static QAT hyperparameters."""
+
+    delay: int = dataclasses.field(metadata=dict(static=True), default=0)
+    n_bits: int = dataclasses.field(metadata=dict(static=True), default=16)
+    enabled: bool = dataclasses.field(metadata=dict(static=True), default=True)
+    # "minmax" (paper) or "ema" (beyond-paper robust option)
+    monitor: str = dataclasses.field(metadata=dict(static=True), default="minmax")
+    # project full-precision activations onto the Q15.16 lattice (paper: the
+    # accelerator is fixed-point from step 0). Disable to get a pure-float
+    # QAT baseline (QuaRL-style).
+    fxp32_phase1: bool = dataclasses.field(metadata=dict(static=True), default=True)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class QATState:
+    """Dynamic QAT state threaded through train_step (donated)."""
+
+    config: QATConfig
+    step: Array                      # i32 scalar
+    ranges: dict[str, RangeStat]     # per-site running ranges
+
+    @staticmethod
+    def init(delay: int, sites: list[str], n_bits: int = 16,
+             enabled: bool = True, monitor: str = "minmax",
+             fxp32_phase1: bool = True) -> "QATState":
+        return QATState(
+            config=QATConfig(delay=delay, n_bits=n_bits, enabled=enabled,
+                             monitor=monitor, fxp32_phase1=fxp32_phase1),
+            step=jnp.array(0, jnp.int32),
+            ranges=init_ranges(sites),
+        )
+
+    @property
+    def quantized_phase(self) -> Array:
+        """Boolean scalar: past the quantization delay?"""
+        return self.step >= self.config.delay
+
+    def tick(self) -> "QATState":
+        return dataclasses.replace(self, step=self.step + 1)
+
+
+class QATContext:
+    """Mutable-looking wrapper used *inside one traced step*.
+
+    Collects the per-site range updates produced by `site()` calls and
+    returns the new range tree from `finalize()`; pure from JAX's point of
+    view because the collection happens at trace time.
+    """
+
+    def __init__(self, state: QATState):
+        self.state = state
+        self._new_ranges: dict[str, RangeStat] = dict(state.ranges)
+
+    def site(self, name: str, x: Array) -> Array:
+        cfg = self.state.config
+        if not cfg.enabled:
+            return x
+        if name not in self.state.ranges:
+            raise KeyError(
+                f"QAT site {name!r} not registered; known: "
+                f"{sorted(self.state.ranges)[:8]}...")
+        stat = self._new_ranges[name]
+        quant_phase = self.state.quantized_phase
+
+        # --- phase 1: monitor ranges (only counts pre-delay updates) -------
+        upd = update_minmax if cfg.monitor == "minmax" else update_ema
+        cand = upd(stat, jax.lax.stop_gradient(x))
+        new_stat = jax.tree.map(
+            lambda old, new: jnp.where(quant_phase, old, new), stat, cand)
+        self._new_ranges[name] = new_stat
+
+        # --- produce the activation both ways, select by phase -------------
+        a_min, a_max = finalized(new_stat)
+        x_q16 = fxp.fake_quant_affine(x, a_min, a_max, cfg.n_bits)
+        x_full = fxp.fake_quant(x, fxp.FXP32) if cfg.fxp32_phase1 else x
+        return jnp.where(quant_phase, x_q16, x_full)
+
+    def finalize(self) -> QATState:
+        return dataclasses.replace(self.state, ranges=self._new_ranges)
+
+
+def quantize_weights(params, enabled: bool = True):
+    """Project every weight onto the Q15.16 lattice (STE) — FIXAR keeps
+    weights fxp32 for the whole run."""
+    if not enabled:
+        return params
+    return jax.tree.map(lambda p: fxp.fake_quant(p, fxp.FXP32), params)
+
+
+def quantize_grads(grads, enabled: bool = True):
+    """Gradients are fxp32 too (the gradient memory is 32-bit BRAM)."""
+    if not enabled:
+        return grads
+    return jax.tree.map(lambda g: fxp.fake_quant(g, fxp.FXP32), grads)
+
+
+__all__ = ["QATConfig", "QATState", "QATContext", "quantize_weights",
+           "quantize_grads"]

@@ -1,0 +1,75 @@
+"""Per-layer activation range monitoring (Algorithm 1's A_min/A_max capture).
+
+During the full-precision phase (t < quantization delay d) FIXAR's hardware
+"actively monitors" the min and max of every layer's activations.  We model
+that as a pytree of `RangeStat` leaves keyed by layer name, updated with a
+running min/max (the paper) or an exponential moving average (a standard
+robustification we expose as an option and ablate in benchmarks/fig7).
+
+The tree is threaded through `train_step` as part of the QAT state and is
+donated, so monitoring is free of host sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class RangeStat:
+    """Running activation range for one quantization site."""
+
+    a_min: Array  # f32 scalar
+    a_max: Array  # f32 scalar
+    count: Array  # i32 scalar — number of updates folded in
+
+    @staticmethod
+    def init() -> "RangeStat":
+        return RangeStat(
+            a_min=jnp.array(jnp.inf, jnp.float32),
+            a_max=jnp.array(-jnp.inf, jnp.float32),
+            count=jnp.array(0, jnp.int32),
+        )
+
+
+def update_minmax(stat: RangeStat, x: Array) -> RangeStat:
+    """Paper-faithful running min/max."""
+    return RangeStat(
+        a_min=jnp.minimum(stat.a_min, jnp.min(x)).astype(jnp.float32),
+        a_max=jnp.maximum(stat.a_max, jnp.max(x)).astype(jnp.float32),
+        count=stat.count + 1,
+    )
+
+
+def update_ema(stat: RangeStat, x: Array, momentum: float = 0.99) -> RangeStat:
+    """EMA variant (beyond-paper option, robust to outlier spikes)."""
+    mn, mx = jnp.min(x), jnp.max(x)
+    first = stat.count == 0
+    new_min = jnp.where(first, mn, momentum * stat.a_min + (1 - momentum) * mn)
+    new_max = jnp.where(first, mx, momentum * stat.a_max + (1 - momentum) * mx)
+    return RangeStat(new_min.astype(jnp.float32), new_max.astype(jnp.float32),
+                     stat.count + 1)
+
+
+def finalized(stat: RangeStat) -> tuple[Array, Array]:
+    """Ranges with the never-updated guard (degenerate -> [-1, 1])."""
+    bad = stat.count == 0
+    a_min = jnp.where(bad, -1.0, stat.a_min)
+    a_max = jnp.where(bad, 1.0, stat.a_max)
+    # Guarantee a non-degenerate span even if all activations were constant.
+    span_ok = (a_max - a_min) > 1e-6
+    return (jnp.where(span_ok, a_min, a_min - 0.5),
+            jnp.where(span_ok, a_max, a_max + 0.5))
+
+
+def init_ranges(site_names: list[str]) -> dict[str, RangeStat]:
+    return {name: RangeStat.init() for name in site_names}
+
+
+__all__ = ["RangeStat", "update_minmax", "update_ema", "finalized", "init_ranges"]

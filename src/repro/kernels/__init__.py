@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for FIXAR's compute hot-spots.
+
+fxp_matmul — dual-precision dense layer (AAP core + configurable-datapath PE)
+quantize   — fused activation range monitor + Q_n quantizer (Algorithm 1)
+attention  — flash attention for the LM serve path (beyond-paper extension)
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec), ops.py (jitted
+public wrapper) and ref.py (pure-jnp oracle); tests sweep shapes/dtypes and
+assert allclose against the oracle in interpret mode.
+"""

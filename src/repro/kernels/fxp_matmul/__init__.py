@@ -1,0 +1,2 @@
+from repro.kernels.fxp_matmul.ops import fxp_dense
+from repro.kernels.fxp_matmul.ref import limb_split, ref_fxp_dense, ref_flops

@@ -1,0 +1,67 @@
+"""Jitted public wrapper for the dual-precision dense kernel.
+
+`fxp_dense` pads arbitrary (M, K, N) up to block multiples, performs the
+limb split, dispatches the Pallas kernel, and unpads — so callers (DDPG
+networks, LM MLPs) can use it as a drop-in `x @ w + b` with a precision
+switch.  On CPU we run interpret mode; on TPU the same code emits the real
+Mosaic kernel (`interpret` defaults from jax.default_backend()).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.fxp_matmul.kernel import fxp_dense_pallas
+from repro.kernels.fxp_matmul.ref import limb_split
+
+Array = jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return (x + m - 1) // m * m
+
+
+def _auto_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
+    """MXU-aligned blocks, shrunk for small problems (DDPG layers are tiny:
+    K<=421, N<=400 — one block holds the whole weight, the FPGA's
+    'entire model on-chip' regime)."""
+    bm = min(128, _round_up(m, 8))
+    bn = min(128, _round_up(n, 128))
+    bk = min(512, _round_up(k, 128))
+    return bm, bn, bk
+
+
+@functools.partial(jax.jit, static_argnames=("full_precision", "activation",
+                                             "interpret"))
+def fxp_dense(x: Array, w: Array, b: Optional[Array] = None, *,
+              full_precision: bool = True, activation: str = "none",
+              interpret: Optional[bool] = None) -> Array:
+    """Dual-precision dense layer: act(x @ w + b) via the AAP-core kernel.
+
+    x: (..., K) f32 — flattened to (M, K).  w: (K, N).  b: (N,) or None.
+    full_precision=True  -> two-pass limb datapath (pre-delay, fxp32 regime)
+    full_precision=False -> one-pass (post-delay, quantized activations)
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    orig_shape = x.shape
+    k = orig_shape[-1]
+    n = w.shape[-1]
+    x2 = x.reshape(-1, k).astype(jnp.float32)
+    m = x2.shape[0]
+
+    bm, bn, bk = _auto_blocks(m, k, n)
+    mp, kp, np_ = _round_up(m, bm), _round_up(k, bk), _round_up(n, bn)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, kp - k)))
+    wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
+    bp = None if b is None else jnp.pad(b.astype(jnp.float32), (0, np_ - n))
+
+    hi, lo = limb_split(x2)
+    out = fxp_dense_pallas(hi, lo if full_precision else None, wp, bp,
+                           full_precision=full_precision,
+                           activation=activation,
+                           bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return out[:m, :n].reshape(*orig_shape[:-1], n)

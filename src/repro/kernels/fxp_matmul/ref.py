@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for the dual-precision fixed-point dense layer.
+
+Semantics (value-space model of the FIXAR PE, §V-C):
+
+  full precision  y = act( (x_hi @ w) + (x_lo @ w) + b )
+                  where x = x_hi + x_lo is the *limb split*: x_hi is x rounded
+                  onto the coarse (half-width) lattice, x_lo the residual.
+                  Two MAC passes per output — the two 32x16 DSP multipliers
+                  combining for ONE activation.
+
+  half precision  y = act( (x_hi @ w) + b )
+                  x has already been quantized upstream (QAT, t >= delay), so
+                  the residual limb is zero by construction and the PE retires
+                  the pass — ONE MAC pass per output, 2x throughput.
+
+The hi/lo split is exact in f32 (x_hi + x_lo == x bitwise), so the full-
+precision path equals x @ w up to f32 dot-product rounding; tests assert the
+Pallas kernel matches this oracle exactly (same op sequence) and matches
+jnp.dot within tight tolerance.
+
+On a real TPU the hi limb is the bf16 image of x and the MACs are MXU bf16
+passes — the same multi-pass split XLA uses for f32 matmuls on the MXU
+(see DESIGN.md §2: FPGA DSP decomposition -> MXU pass decomposition).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+_ACTIVATIONS = {
+    "none": lambda x: x,
+    "relu": jax.nn.relu,
+    "tanh": jnp.tanh,
+}
+
+
+def limb_split(x: Array) -> tuple[Array, Array]:
+    """Exact hi/lo split: hi = bf16 image of x, lo = residual (both f32)."""
+    hi = x.astype(jnp.bfloat16).astype(jnp.float32)
+    lo = (x - hi).astype(jnp.float32)
+    return hi, lo
+
+
+def ref_fxp_dense(x: Array, w: Array, b: Optional[Array] = None, *,
+                  full_precision: bool = True, activation: str = "none") -> Array:
+    """Oracle for kernels/fxp_matmul. x: (M, K) f32, w: (K, N) f32."""
+    act = _ACTIVATIONS[activation]
+    hi, lo = limb_split(x)
+    acc = jnp.dot(hi, w, preferred_element_type=jnp.float32)
+    if full_precision:
+        acc = acc + jnp.dot(lo, w, preferred_element_type=jnp.float32)
+    if b is not None:
+        acc = acc + b[None, :]
+    return act(acc)
+
+
+def ref_flops(m: int, n: int, k: int, full_precision: bool) -> int:
+    """MAC-pass FLOP model — the 2x throughput claim in numbers."""
+    passes = 2 if full_precision else 1
+    return 2 * m * n * k * passes

@@ -1,0 +1,2 @@
+from repro.kernels.quantize.ops import monitor_quant
+from repro.kernels.quantize.ref import ref_monitor_quant

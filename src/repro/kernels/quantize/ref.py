@@ -1,0 +1,42 @@
+"""Pure-jnp oracle for the fused monitor+quantize unit (Algorithm 1 inner loop).
+
+One pass over the activation tensor does BOTH hardware functions:
+
+  * range monitoring (the BRAM-side min/max capture, active pre-delay),
+  * the precision-selected projection:
+      - full phase : project onto the Q15.16 fixed-point lattice,
+      - quant phase: affine-quantize with the *incoming* captured ranges
+        (Q_n of the paper: q = clip(round(x/delta) + z); emitted dequantized
+        so downstream MACs see lattice values).
+
+Returns (y, new_min, new_max).  The phase flag is a traced boolean so a
+single compiled program serves the whole training run (configurable
+datapath, §V-C).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+
+Array = jax.Array
+
+
+def ref_monitor_quant(x: Array, a_min: Array, a_max: Array,
+                      quant_phase: Array, n_bits: int = 16
+                      ) -> tuple[Array, Array, Array]:
+    xf = x.astype(jnp.float32)
+    new_min = jnp.minimum(a_min, jnp.min(xf))
+    new_max = jnp.maximum(a_max, jnp.max(xf))
+    # monitoring freezes once quantization starts (Algorithm 1)
+    new_min = jnp.where(quant_phase, a_min, new_min)
+    new_max = jnp.where(quant_phase, a_max, new_max)
+
+    y_full = fxp.fake_quant(xf, fxp.FXP32)
+    delta, z = fxp.affine_params(a_min, a_max, n_bits)
+    q = jnp.clip(jnp.round(xf / delta) + z.astype(jnp.float32),
+                 0.0, float((1 << n_bits) - 1))
+    y_quant = (q - z.astype(jnp.float32)) * delta
+    y = jnp.where(quant_phase, y_quant, y_full)
+    return y, new_min, new_max

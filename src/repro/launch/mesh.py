@@ -1,0 +1,30 @@
+"""Production mesh builders.
+
+Defined as FUNCTIONS (not module constants) so importing this module never
+touches jax device state — required because the dry-run force-creates 512
+host devices via XLA_FLAGS *before* any jax import, while tests and benches
+must keep seeing 1 CPU device.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+    Multi-pod:  (pod=2, data=16, model=16) = 512 chips; `pod` composes with
+    `data` for hierarchical data parallelism (DESIGN.md §5)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = False):
+    """Small mesh for subprocess sharding tests (8 host devices)."""
+    if multi_pod:
+        shape, axes = (2, n_data, n_model), ("pod", "data", "model")
+    else:
+        shape, axes = (n_data, n_model), ("data", "model")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto)

@@ -1,0 +1,117 @@
+"""Input/state ShapeDtypeStruct builders + sharding assembly for the
+dry-run and launchers (the shannon/kernels pattern: weak-type-correct,
+shardable, zero device allocation).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallelism import (Logical, ShardingRules, tree_shardings)
+from repro.models import transformer as T
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.optim import adam
+from repro.train.step import TrainState, init_state
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# batch input specs
+# ---------------------------------------------------------------------------
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "decode":
+        return {"tokens": SDS((b, 1), jnp.int32)}
+    batch: dict[str, Any] = {}
+    if cfg.frontend != "audio_stub":
+        batch["tokens"] = SDS((b, s), jnp.int32)
+    if cfg.frontend == "vision_stub":
+        batch["frontend"] = SDS((b, cfg.frontend_len, cfg.frontend_dim),
+                                jnp.float32)
+    elif cfg.frontend == "audio_stub":
+        batch["frontend"] = SDS((b, s, cfg.frontend_dim), jnp.float32)
+    if shape.kind == "train":
+        batch["labels"] = SDS((b, s), jnp.int32)
+    return batch
+
+
+def input_spec_logical(cfg: ModelConfig, shape: ShapeConfig) -> dict[str, Any]:
+    out: dict[str, Any] = {}
+    if shape.kind == "decode":
+        return {"tokens": Logical("batch", None)}
+    if cfg.frontend != "audio_stub":
+        out["tokens"] = Logical("batch", "seq")
+    if cfg.frontend == "vision_stub":
+        out["frontend"] = Logical("batch", None, None)
+    elif cfg.frontend == "audio_stub":
+        out["frontend"] = Logical("batch", "seq", None)
+    if shape.kind == "train":
+        out["labels"] = Logical("batch", "seq")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# state / params / cache specs
+# ---------------------------------------------------------------------------
+
+
+def params_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: T.init_params(jax.random.key(0), cfg))
+
+
+def state_shapes(cfg: ModelConfig):
+    return jax.eval_shape(lambda: init_state(jax.random.key(0), cfg))
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_seq: int):
+    return jax.eval_shape(lambda: T.init_cache(cfg, batch, max_seq))
+
+
+def _replicated_like(tree):
+    return jax.tree.map(lambda _: Logical(), tree)
+
+
+def state_logical(cfg: ModelConfig) -> TrainState:
+    pspecs = T.param_specs(cfg)
+    return TrainState(
+        params=pspecs,
+        opt=adam.AdamState(step=Logical(), mu=pspecs, nu=pspecs),
+        ranges=_replicated_like(T.init_ranges(cfg)),
+        step=Logical(),
+    )
+
+
+def train_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    rules: ShardingRules):
+    """(state_shardings, batch_shardings) for make_train_step's signature."""
+    st_shapes = state_shapes(cfg)
+    st_sh = tree_shardings(state_logical(cfg), mesh, rules,
+                           shape_tree=st_shapes)
+    b_shapes = input_specs(cfg, shape)
+    b_sh = tree_shardings(input_spec_logical(cfg, shape), mesh, rules,
+                          shape_tree=b_shapes)
+    return st_sh, b_sh
+
+
+def serve_shardings(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                    rules: ShardingRules):
+    """(params_sh, tokens_sh, cache_sh) for serve_step / prefill."""
+    p_shapes = params_shapes(cfg)
+    p_sh = tree_shardings(T.param_specs(cfg), mesh, rules,
+                          shape_tree=p_shapes)
+    b_shapes = input_specs(cfg, shape)
+    b_sh = tree_shardings(input_spec_logical(cfg, shape), mesh, rules,
+                          shape_tree=b_shapes)
+    if shape.kind != "decode":
+        return p_sh, b_sh, None
+    c_shapes = cache_shapes(cfg, shape.global_batch, shape.seq_len)
+    c_sh = tree_shardings(T.cache_specs(cfg), mesh, rules,
+                          shape_tree=c_shapes)
+    return p_sh, b_sh, c_sh

@@ -1,0 +1,2 @@
+from repro.models import config, frontend, layers, moe, rglru, rwkv6, transformer
+from repro.models.config import ALL_SHAPES, ModelConfig, ShapeConfig

@@ -1,0 +1,52 @@
+"""Modality frontend stubs (per task spec: [vlm]/[audio] entries are the
+transformer BACKBONE only; `input_specs()` provides precomputed frame/patch
+embeddings).
+
+vision_stub (phi-3-vision): batch["frontend"] = (B, frontend_len, frontend_dim)
+    CLIP patch embeddings, linearly projected into d_model and overwriting
+    the first `frontend_len` token positions (prefix), labels masked there.
+
+audio_stub (hubert): batch["frontend"] = (B, S, frontend_dim) conv-stem frame
+    embeddings, projected to d_model and used *instead of* token embeddings;
+    the loss is masked-frame codebook prediction.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallelism import Logical, ShardingRules, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import _uniform_init
+
+Array = jax.Array
+
+
+def frontend_init(key, cfg: ModelConfig):
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": _uniform_init(key, (cfg.frontend_dim, cfg.d_model),
+                                  cfg.frontend_dim)}
+
+
+def frontend_specs(cfg: ModelConfig):
+    if cfg.frontend == "none":
+        return {}
+    return {"proj": Logical(None, "embed")}
+
+
+def apply_frontend(x_embed: Array, params, batch: dict, cfg: ModelConfig,
+                   rules: Optional[ShardingRules]) -> Array:
+    """Merge frontend embeddings into the token-embedding sequence."""
+    if cfg.frontend == "none" or "frontend" not in batch:
+        return x_embed
+    dt = cfg.compute_dtype
+    fe = batch["frontend"].astype(dt) @ params["proj"].astype(dt)
+    if cfg.frontend == "audio_stub":
+        return constrain(fe, rules, "batch", "seq", "embed")
+    # vision_stub: prefix replace
+    flen = cfg.frontend_len
+    merged = jnp.concatenate([fe[:, :flen], x_embed[:, flen:]], axis=1)
+    return constrain(merged, rules, "batch", "seq", "embed")

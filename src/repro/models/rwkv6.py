@@ -1,0 +1,261 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): token-shift with data-dependent
+interpolation (ddlerp), per-channel data-dependent decay, and the WKV matrix
+recurrence, in a chunk-parallel formulation.
+
+Per head (dim n): state S ∈ R^{n×n},
+    o_t = r_t · (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ,     w_t = exp(-exp(w0 + lora_w(x)))
+
+Chunked closed form over a chunk of length c with Lx_t = Σ_{i<t} log w_i:
+    o_t  = (r_t ⊙ e^{Lx_t}) S_0
+         + Σ_{j<t} [(r_t ⊙ e^{Lx_t}) · (k_j ⊙ e^{-Lx_{j+1}})] v_j
+         + (r_t ⊙ u ⊙ k_t) v_t
+    S_c  = diag(e^{Lx_c}) S_0 + Σ_j (k_j ⊙ e^{Lx_c - Lx_{j+1}}) v_jᵀ
+
+which is two matmuls + one masked (c×c) matmul per chunk — MXU-friendly and
+`lax.scan`s over S/c chunks (the chunk body is exposed for the roofline
+harness; see benchmarks/roofline.py).  Decode is the O(1) recurrence.
+
+QAT note (DESIGN.md §Arch-applicability): the scan state S stays in f32;
+the projection inputs run through QAT sites.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallelism import Logical, ShardingRules, constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import LayerQAT, _uniform_init, group_norm_heads
+
+Array = jax.Array
+Params = dict[str, Any]
+
+LORA_R = 32
+DECAY_LORA_R = 64
+CHUNK = 128
+
+
+def _n_heads(cfg: ModelConfig) -> int:
+    return cfg.d_model // cfg.rwkv_head_dim
+
+
+def rwkv_init(key, cfg: ModelConfig) -> Params:
+    d, f = cfg.d_model, cfg.d_ff
+    h, n = _n_heads(cfg), cfg.rwkv_head_dim
+    ks = jax.random.split(key, 16)
+    return {
+        # time-mix: ddlerp base vectors for (r,k,v,w,g) + shared lora
+        "tm_base": jnp.zeros((5, d), jnp.float32),
+        "tm_A": _uniform_init(ks[0], (d, 5 * LORA_R), d),
+        "tm_B": _uniform_init(ks[1], (5, LORA_R, d), LORA_R) * 0.1,
+        # decay: w0 + lora
+        "w0": jnp.full((d,), -6.0, jnp.float32),
+        "wA": _uniform_init(ks[2], (d, DECAY_LORA_R), d),
+        "wB": _uniform_init(ks[3], (DECAY_LORA_R, d), DECAY_LORA_R) * 0.1,
+        "u": jnp.zeros((h, n), jnp.float32),  # bonus
+        "wr": _uniform_init(ks[4], (d, d), d),
+        "wk": _uniform_init(ks[5], (d, d), d),
+        "wv": _uniform_init(ks[6], (d, d), d),
+        "wg": _uniform_init(ks[7], (d, d), d),
+        "wo": _uniform_init(ks[8], (d, d), d),
+        "gn_scale": jnp.ones((d,), jnp.float32),
+        "gn_bias": jnp.zeros((d,), jnp.float32),
+        # channel-mix
+        "cm_mu_k": jnp.full((d,), 0.5, jnp.float32),
+        "cm_mu_r": jnp.full((d,), 0.5, jnp.float32),
+        "cm_wk": _uniform_init(ks[9], (d, f), d),
+        "cm_wv": _uniform_init(ks[10], (f, d), f),
+        "cm_wr": _uniform_init(ks[11], (d, d), d),
+    }
+
+
+def rwkv_specs(cfg: ModelConfig) -> Params:
+    emb2 = Logical("embed", "state")
+    return {
+        "tm_base": Logical(None, "embed"),
+        "tm_A": Logical("embed", None),
+        "tm_B": Logical(None, None, "embed"),
+        "w0": Logical("embed"),
+        "wA": Logical("embed", None),
+        "wB": Logical(None, "embed"),
+        "u": Logical("heads_rwkv", None),
+        "wr": emb2, "wk": emb2, "wv": emb2, "wg": emb2,
+        "wo": Logical("state", "embed"),
+        "gn_scale": Logical("embed"), "gn_bias": Logical("embed"),
+        "cm_mu_k": Logical("embed"), "cm_mu_r": Logical("embed"),
+        "cm_wk": Logical("embed", "mlp"),
+        "cm_wv": Logical("mlp", "embed"),
+        "cm_wr": Logical("embed", "state"),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int) -> dict[str, Array]:
+    h, n = _n_heads(cfg), cfg.rwkv_head_dim
+    return {
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "x_tm": jnp.zeros((batch, cfg.d_model), jnp.float32),  # last token (time-mix shift)
+        "x_cm": jnp.zeros((batch, cfg.d_model), jnp.float32),  # last token (channel-mix)
+    }
+
+
+def state_specs(cfg: ModelConfig) -> dict[str, Logical]:
+    return {"wkv": Logical("batch", "heads_rwkv", None, None),
+            "x_tm": Logical("batch", "embed"),
+            "x_cm": Logical("batch", "embed")}
+
+
+def _ddlerp(x, x_prev, p, dt):
+    """Data-dependent lerp producing the 5 mixed inputs (r,k,v,w,g)."""
+    delta = (x_prev - x).astype(dt)
+    lora = jnp.tanh(x @ p["tm_A"].astype(dt))
+    lora = lora.reshape(*x.shape[:-1], 5, LORA_R)
+    mix = p["tm_base"].astype(dt) + jnp.einsum(
+        "...fr,frd->...fd", lora, p["tm_B"].astype(dt))
+    # x_f = x + delta * mix_f  for f in (r,k,v,w,g)
+    return x[..., None, :] + delta[..., None, :] * mix  # (..., 5, d)
+
+
+def _shift(x, x_last):
+    """Token shift: x_prev[t] = x[t-1], seeded by the carried last token."""
+    return jnp.concatenate([x_last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _wkv_chunk(r, k, v, logw, u, s0):
+    """One chunk of the WKV recurrence.
+
+    r,k,v: (B,c,H,n); logw: (B,c,H,n) (negative); u: (H,n);
+    s0: (B,H,n,n) f32.  Returns (o: (B,c,H,n), s_next).
+    """
+    bsz, c, h, n = r.shape
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    lw = logw.astype(jnp.float32)
+    lx = jnp.cumsum(lw, axis=1)          # inclusive: Lx_{t+1} in the notation
+    lx_excl = lx - lw                    # exclusive: Lx_t
+
+    r_dec = rf * jnp.exp(lx_excl)        # r_t ⊙ e^{Lx_t}
+    k_dec = kf * jnp.exp(-lx)            # k_j ⊙ e^{-Lx_{j+1}}
+
+    # inter-chunk: (r ⊙ e^{Lx}) @ S0
+    o_inter = jnp.einsum("bchn,bhnm->bchm", r_dec, s0)
+    # intra-chunk: strictly-lower-triangular scores
+    scores = jnp.einsum("bchn,bdhn->bhcd", r_dec, k_dec)
+    tri = jnp.tril(jnp.ones((c, c), jnp.float32), k=-1)
+    scores = scores * tri[None, None]
+    o_intra = jnp.einsum("bhcd,bdhn->bchn", scores, vf)
+    # diagonal bonus term
+    o_diag = jnp.sum(rf * u[None, None] * kf, -1, keepdims=True) * vf
+
+    o = o_inter + o_intra + o_diag
+
+    # state update
+    decay_all = jnp.exp(lx[:, -1])                        # e^{Lx_c}  (B,H,n)
+    k_rem = kf * jnp.exp(lx[:, -1:, :, :] - lx)           # k_j ⊙ e^{Lx_c - Lx_{j+1}}
+    s_next = decay_all[..., None] * s0 + jnp.einsum(
+        "bchn,bchm->bhnm", k_rem, vf)
+    return o, s_next
+
+
+def time_mix(x: Array, p: Params, cfg: ModelConfig, state: dict[str, Array],
+             rules: Optional[ShardingRules], qat: LayerQAT,
+             unroll: bool = False) -> tuple[Array, dict[str, Array]]:
+    """Full-sequence (train/prefill) time-mix. x: (B, S, d)."""
+    b, s, d = x.shape
+    h, n = _n_heads(cfg), cfg.rwkv_head_dim
+    dt = cfg.compute_dtype
+
+    x = qat.site("tmix_in", x)
+    xm = _ddlerp(x, _shift(x, state["x_tm"].astype(x.dtype)), p, dt)
+    xr, xk, xv, xw, xg = (xm[:, :, i] for i in range(5))
+
+    r = (xr @ p["wr"].astype(dt)).reshape(b, s, h, n)
+    k = (xk @ p["wk"].astype(dt)).reshape(b, s, h, n)
+    v = (xv @ p["wv"].astype(dt)).reshape(b, s, h, n)
+    g = jax.nn.silu(xg @ p["wg"].astype(dt))
+    logw = -jnp.exp((p["w0"].astype(jnp.float32)
+                     + (xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]))
+    logw = logw.reshape(b, s, h, n)
+
+    c = min(CHUNK, s)
+    assert s % c == 0, f"seq {s} not divisible by chunk {c}"
+    n_chunks = s // c
+    resh = lambda t: t.reshape(b, n_chunks, c, h, n).swapaxes(0, 1)
+    rs, ks, vs, ws = resh(r), resh(k), resh(v), resh(logw)
+
+    def body(s0, inp):
+        rc, kc, vc, wc = inp
+        o, s1 = _wkv_chunk(rc, kc, vc, wc, p["u"].astype(jnp.float32), s0)
+        return s1, o
+
+    # Unrolled-chunk mode is what the roofline harness lowers (no while
+    # loops => exact cost_analysis).  Beyond 64 chunks the unrolled HLO
+    # makes XLA-CPU compilation pathological, so we fall back to scan and
+    # the harness adds the analytic (n_chunks-1)x chunk-body correction
+    # (benchmarks/roofline.py::_rwkv_chunk_correction).
+    if unroll and n_chunks <= 64:
+        s_cur, outs = state["wkv"], []
+        for i in range(n_chunks):
+            s_cur, oc = body(s_cur, (rs[i], ks[i], vs[i], ws[i]))
+            outs.append(oc)
+        s_final, os_ = s_cur, jnp.stack(outs)
+    else:
+        s_final, os_ = jax.lax.scan(body, state["wkv"], (rs, ks, vs, ws))
+    o = os_.swapaxes(0, 1).reshape(b, s, d)
+
+    o = group_norm_heads(o.astype(dt), p["gn_scale"], p["gn_bias"], h)
+    o = o * g
+    y = o @ p["wo"].astype(dt)
+    y = constrain(y, rules, "batch", "seq", "embed")
+    new_state = {"wkv": s_final, "x_tm": x[:, -1, :].astype(jnp.float32),
+                 "x_cm": state["x_cm"]}
+    return y, new_state
+
+
+def channel_mix(x: Array, p: Params, cfg: ModelConfig, state: dict[str, Array],
+                rules: Optional[ShardingRules], qat: LayerQAT
+                ) -> tuple[Array, dict[str, Array]]:
+    dt = cfg.compute_dtype
+    x = qat.site("cmix_in", x)
+    xp = _shift(x, state["x_cm"].astype(x.dtype))
+    xk = x + (xp - x) * p["cm_mu_k"].astype(dt)
+    xr = x + (xp - x) * p["cm_mu_r"].astype(dt)
+    kk = jnp.square(jax.nn.relu(xk @ p["cm_wk"].astype(dt)))
+    kk = constrain(kk, rules, "batch", "seq", "mlp")
+    v = kk @ p["cm_wv"].astype(dt)
+    rgate = jax.nn.sigmoid(xr @ p["cm_wr"].astype(dt))
+    y = rgate * v
+    new_state = dict(state, x_cm=x[:, -1, :].astype(jnp.float32))
+    return constrain(y, rules, "batch", "seq", "embed"), new_state
+
+
+def decode_step(x: Array, p: Params, cfg: ModelConfig, state: dict[str, Array],
+                rules: Optional[ShardingRules], qat: LayerQAT, which: str
+                ) -> tuple[Array, dict[str, Array]]:
+    """O(1) single-token step; x: (B, 1, d). `which` in {"tmix","cmix"}."""
+    if which == "tmix":
+        b, _, d = x.shape
+        h, n = _n_heads(cfg), cfg.rwkv_head_dim
+        dt = cfg.compute_dtype
+        x = qat.site("tmix_in", x)
+        xm = _ddlerp(x, state["x_tm"].astype(x.dtype)[:, None, :], p, dt)
+        xr, xk, xv, xw, xg = (xm[:, :, i] for i in range(5))
+        r = (xr @ p["wr"].astype(dt)).reshape(b, h, n)
+        k = (xk @ p["wk"].astype(dt)).reshape(b, h, n)
+        v = (xv @ p["wv"].astype(dt)).reshape(b, h, n)
+        g = jax.nn.silu(xg @ p["wg"].astype(dt))[:, 0]
+        w = jnp.exp(-jnp.exp(p["w0"].astype(jnp.float32)
+                             + (xw.astype(jnp.float32)[:, 0] @ p["wA"]) @ p["wB"]))
+        w = w.reshape(b, h, n)
+        rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+        s0 = state["wkv"]
+        wkv = s0 + (p["u"].astype(jnp.float32)[None] * kf)[..., None] * vf[..., None, :]
+        o = jnp.einsum("bhn,bhnm->bhm", rf, wkv).reshape(b, d)
+        s1 = w[..., None] * s0 + kf[..., None] * vf[..., None, :]
+        o = group_norm_heads(o.astype(dt), p["gn_scale"], p["gn_bias"], h)
+        y = ((o * g) @ p["wo"].astype(dt))[:, None, :]
+        new_state = dict(state, wkv=s1, x_tm=x[:, 0, :].astype(jnp.float32))
+        return y, new_state
+    y, new_state = channel_mix(x, p, cfg, state, rules, qat)
+    return y, new_state

@@ -1,0 +1,3 @@
+from repro.optim import adam, fxp_adam, schedule
+from repro.optim.adam import AdamConfig, AdamState, clip_by_global_norm, global_norm
+from repro.optim.fxp_adam import FxpAdamConfig

@@ -1,0 +1,99 @@
+"""Adam/AdamW on parameter pytrees — pure JAX, no optax dependency.
+
+The FPGA hosts a dedicated Adam module fed by the gradient memory (§III);
+`fxp_adam.py` is the fixed-point image of that unit.  This file is the
+float reference and the optimizer used by the LM training substrate.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class AdamState:
+    step: Array    # i32
+    mu: PyTree     # first moment
+    nu: PyTree     # second moment
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamConfig:
+    lr: float = 1e-4            # FIXAR: Adam lr 1e-4 (§VI-B)
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.0   # AdamW when > 0
+    grad_clip_norm: Optional[float] = None
+    # callable step -> lr multiplier (see schedule.py); None = constant
+    schedule: Optional[Callable[[Array], Array]] = None
+
+
+def init(params: PyTree) -> AdamState:
+    zeros = lambda p: jnp.zeros_like(p)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     mu=jax.tree.map(zeros, params),
+                     nu=jax.tree.map(zeros, params))
+
+
+def global_norm(tree: PyTree) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def update(cfg: AdamConfig, grads: PyTree, state: AdamState, params: PyTree
+           ) -> tuple[PyTree, AdamState, dict[str, Array]]:
+    """Returns (new_params, new_state, metrics)."""
+    metrics: dict[str, Array] = {}
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(step)
+    metrics["lr"] = lr
+
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * jnp.square(g)
+        mhat = m / bc1
+        vhat = v / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay > 0.0:
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step=step, mu=new_m, nu=new_v), metrics
+
+
+__all__ = ["AdamConfig", "AdamState", "init", "update", "global_norm",
+           "clip_by_global_norm"]

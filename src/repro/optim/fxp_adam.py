@@ -1,0 +1,60 @@
+"""Fixed-point Adam — the on-chip Adam optimizer module of FIXAR (§III).
+
+"With accumulated gradient, weight update occurs in Adam optimizer module,
+ which is fully local to FPGA as the entire model parameters are stored
+ on-chip BRAMs."
+
+Weights and gradients are fxp32 (Q15.16) the whole run; the Adam moments are
+carried on the same lattice.  We implement this as the float Adam update
+followed by lattice projection of params — bit-equivalent to an integer
+datapath with round-to-nearest at every store, with the division and sqrt
+evaluated in the PE's wide intermediate precision (the FPGA evaluates them
+with 48-bit DSP intermediates; both round once at the output register).
+
+Adam moments stay in the optimizer unit's *wide accumulators* (48-bit DSP
+registers on the FPGA): projecting v onto Q15.16 would flush sub-2^-17
+second moments to zero and blow up the update (m/sqrt(eps)); measured in
+tests/test_optim.py::test_fxp_moment_quantization_hurts.  `quantize_moments`
+stays available for that ablation.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.optim import adam as fadam
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class FxpAdamConfig(fadam.AdamConfig):
+    fmt: fxp.QFormat = fxp.FXP32
+    quantize_moments: bool = False
+
+
+def init(params: PyTree) -> fadam.AdamState:
+    return fadam.init(params)
+
+
+def update(cfg: FxpAdamConfig, grads: PyTree, state: fadam.AdamState,
+           params: PyTree) -> tuple[PyTree, fadam.AdamState, dict]:
+    # gradient memory is fxp32 (§III) — project incoming grads first
+    grads = jax.tree.map(lambda g: fxp.fake_quant(g, cfg.fmt), grads)
+    new_p, new_s, metrics = fadam.update(cfg, grads, state, params)
+    # weight memory is fxp32 — project the stored params
+    new_p = jax.tree.map(lambda p: fxp.fake_quant(p, cfg.fmt), new_p)
+    if cfg.quantize_moments:
+        new_s = fadam.AdamState(
+            step=new_s.step,
+            mu=jax.tree.map(lambda m: fxp.fake_quant(m, cfg.fmt), new_s.mu),
+            nu=jax.tree.map(lambda v: fxp.fake_quant(v, cfg.fmt), new_s.nu),
+        )
+    return new_p, new_s, metrics
+
+
+__all__ = ["FxpAdamConfig", "init", "update"]

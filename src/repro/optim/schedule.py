@@ -1,0 +1,37 @@
+"""LR schedules as step -> multiplier callables (compose with AdamConfig)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant():
+    return lambda step: jnp.float32(1.0)
+
+
+def linear_warmup(warmup_steps: int):
+    def f(step):
+        s = step.astype(jnp.float32)
+        return jnp.minimum(1.0, s / max(1, warmup_steps))
+    return f
+
+
+def warmup_cosine(warmup_steps: int, total_steps: int, final_frac: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = jnp.minimum(1.0, s / max(1, warmup_steps))
+        progress = jnp.clip((s - warmup_steps) / max(1, total_steps - warmup_steps),
+                            0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * progress))
+        return warm * cos
+    return f
+
+
+def warmup_rsqrt(warmup_steps: int):
+    def f(step):
+        s = jnp.maximum(step.astype(jnp.float32), 1.0)
+        return jnp.minimum(s / max(1, warmup_steps),
+                           jnp.sqrt(jnp.float32(warmup_steps)) / jnp.sqrt(s))
+    return f
+
+
+__all__ = ["constant", "linear_warmup", "warmup_cosine", "warmup_rsqrt"]

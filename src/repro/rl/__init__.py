@@ -1,0 +1,2 @@
+from repro.rl import ddpg, loop, noise, replay
+from repro.rl.envs import locomotion

@@ -1,0 +1,205 @@
+"""DDPG (Lillicrap et al. '15) with FIXAR fixed-point QAT — the paper's workload.
+
+Actor : state → 400 → 300 → act_dim, ReLU hidden, tanh output   (§VI-B)
+Critic: [state; action] → 400 → 300 → 1, ReLU hidden
+Both optimized with Adam, lr 1e-4 (paper), weights/grads projected onto the
+Q15.16 lattice every step (fixed-point weight & gradient memories, §III),
+activations run through QAT sites (Algorithm 1).
+
+`backend="jnp"` evaluates dense layers with jnp.dot on fake-quantized values
+(fast on CPU, identical semantics); `backend="pallas"` routes them through
+the dual-precision AAP-core kernel with the precision mode switched by the
+QAT phase at runtime via lax.cond — the software image of the configurable
+datapath register.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.core.qat import QATContext, QATState, quantize_grads
+from repro.kernels.fxp_matmul.ops import fxp_dense
+from repro.optim import adam, fxp_adam
+from repro.rl.envs.base import EnvSpec
+
+Array = jax.Array
+Params = dict[str, Any]
+
+ACTOR_SITES = ["actor/l0", "actor/l1", "actor/l2"]
+CRITIC_SITES = ["critic/l0", "critic/l1", "critic/l2"]
+HIDDEN = (400, 300)  # paper §VI-B
+
+
+@dataclasses.dataclass(frozen=True)
+class DDPGConfig:
+    gamma: float = 0.99
+    tau: float = 0.005
+    actor_lr: float = 1e-4      # paper: Adam lr 1e-4
+    critic_lr: float = 1e-4
+    batch_size: int = 128
+    qat_delay: int = 0          # optimizer steps before 16-bit switch
+    qat_bits: int = 16
+    qat_enabled: bool = True
+    fxp_weights: bool = True    # project weights/grads to Q15.16
+    backend: str = "jnp"        # "jnp" | "pallas"
+    exploration_sigma: float = 0.1
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class DDPGState:
+    actor: Params
+    critic: Params
+    actor_target: Params
+    critic_target: Params
+    actor_opt: adam.AdamState
+    critic_opt: adam.AdamState
+    qat: QATState
+    step: Array
+
+
+def _init_linear(key, fan_in: int, fan_out: int, final: bool = False):
+    """DDPG init: uniform(±1/sqrt(fan_in)); final layer uniform(±3e-3)."""
+    kw, kb = jax.random.split(key)
+    bound = 3e-3 if final else float(fan_in) ** -0.5
+    w = jax.random.uniform(kw, (fan_in, fan_out), jnp.float32, -bound, bound)
+    b = jax.random.uniform(kb, (fan_out,), jnp.float32, -bound, bound)
+    return {"w": w, "b": b}
+
+
+def _init_mlp(key, sizes: list[int]) -> Params:
+    keys = jax.random.split(key, len(sizes) - 1)
+    return {f"l{i}": _init_linear(keys[i], sizes[i], sizes[i + 1],
+                                  final=(i == len(sizes) - 2))
+            for i in range(len(sizes) - 1)}
+
+
+def _dense(x, layer, activation: str, *, backend: str, quant_phase) -> Array:
+    if backend == "pallas":
+        full = partial(fxp_dense, full_precision=True, activation=activation)
+        half = partial(fxp_dense, full_precision=False, activation=activation)
+        return jax.lax.cond(quant_phase,
+                            lambda a: half(a, layer["w"], layer["b"]),
+                            lambda a: full(a, layer["w"], layer["b"]), x)
+    y = x @ layer["w"] + layer["b"]
+    if activation == "relu":
+        y = jax.nn.relu(y)
+    elif activation == "tanh":
+        y = jnp.tanh(y)
+    return y
+
+
+def actor_forward(params: Params, obs: Array, ctx: Optional[QATContext],
+                  *, backend: str = "jnp") -> Array:
+    qp = ctx.state.quantized_phase if ctx is not None else jnp.array(False)
+    x = obs
+    for i, act in ((0, "relu"), (1, "relu"), (2, "tanh")):
+        if ctx is not None:
+            x = ctx.site(f"actor/l{i}", x)
+        x = _dense(x, params[f"l{i}"], act, backend=backend, quant_phase=qp)
+    return x
+
+
+def critic_forward(params: Params, obs: Array, action: Array,
+                   ctx: Optional[QATContext], *, backend: str = "jnp") -> Array:
+    qp = ctx.state.quantized_phase if ctx is not None else jnp.array(False)
+    x = jnp.concatenate([obs, action], axis=-1)
+    for i, act in ((0, "relu"), (1, "relu"), (2, "none")):
+        if ctx is not None:
+            x = ctx.site(f"critic/l{i}", x)
+        x = _dense(x, params[f"l{i}"], act, backend=backend, quant_phase=qp)
+    return jnp.squeeze(x, -1)
+
+
+def init(key: Array, spec: EnvSpec, cfg: DDPGConfig) -> DDPGState:
+    ka, kc = jax.random.split(key)
+    actor = _init_mlp(ka, [spec.obs_dim, *HIDDEN, spec.act_dim])
+    critic = _init_mlp(kc, [spec.obs_dim + spec.act_dim, *HIDDEN, 1])
+    if cfg.fxp_weights:  # weight memory is Q15.16 from step 0
+        project = lambda t: jax.tree.map(lambda p: fxp.fake_quant(p, fxp.FXP32), t)
+        actor, critic = project(actor), project(critic)
+    qat = QATState.init(delay=cfg.qat_delay, sites=ACTOR_SITES + CRITIC_SITES,
+                        n_bits=cfg.qat_bits, enabled=cfg.qat_enabled)
+    return DDPGState(
+        actor=actor, critic=critic,
+        actor_target=jax.tree.map(jnp.copy, actor),
+        critic_target=jax.tree.map(jnp.copy, critic),
+        actor_opt=adam.init(actor), critic_opt=adam.init(critic),
+        qat=qat, step=jnp.zeros((), jnp.int32))
+
+
+def act(state: DDPGState, obs: Array, *, cfg: DDPGConfig,
+        noise_key: Optional[Array] = None) -> Array:
+    """Actor inference (+ the PRNG exploration-noise unit of Fig. 2)."""
+    ctx = QATContext(state.qat)  # inference uses current ranges, no updates
+    a = actor_forward(state.actor, obs, ctx, backend=cfg.backend)
+    if noise_key is not None:
+        a = a + cfg.exploration_sigma * jax.random.normal(noise_key, a.shape)
+    return jnp.clip(a, -1.0, 1.0)
+
+
+def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
+           ) -> tuple[DDPGState, dict[str, Array]]:
+    """One FIXAR timestep's training work: critic BP/WU then actor BP/WU
+    (operation sequence of Fig. 3), QAT-aware, fixed-point weights."""
+    obs, action = batch["obs"], batch["action"]
+    reward, next_obs = batch["reward"], batch["next_obs"]
+    done = batch["done"].astype(jnp.float32)
+
+    # ---- targets (inference on target nets, no range updates) -------------
+    tctx = QATContext(state.qat)
+    next_a = actor_forward(state.actor_target, next_obs, tctx, backend=cfg.backend)
+    q_next = critic_forward(state.critic_target, next_obs, next_a, tctx,
+                            backend=cfg.backend)
+    y = reward + cfg.gamma * (1.0 - done) * q_next
+    y = jax.lax.stop_gradient(y)
+
+    # ---- critic BP + WU ----------------------------------------------------
+    def critic_loss(cp):
+        ctx = QATContext(state.qat)
+        q = critic_forward(cp, obs, action, ctx, backend=cfg.backend)
+        return jnp.mean(jnp.square(q - y)), ctx.finalize()
+
+    (closs, qat1), cgrads = jax.value_and_grad(critic_loss, has_aux=True)(
+        state.critic)
+    opt_cfg_c = (fxp_adam.FxpAdamConfig(lr=cfg.critic_lr) if cfg.fxp_weights
+                 else adam.AdamConfig(lr=cfg.critic_lr))
+    upd_fn = fxp_adam.update if cfg.fxp_weights else adam.update
+    if cfg.fxp_weights:
+        cgrads = quantize_grads(cgrads)  # gradient memory is fxp32
+    critic, critic_opt, _ = upd_fn(opt_cfg_c, cgrads, state.critic_opt,
+                                   state.critic)
+
+    # ---- actor BP + WU (through the *updated* critic, Fig. 3) -------------
+    def actor_loss(ap):
+        ctx = QATContext(dataclasses.replace(qat1))
+        a = actor_forward(ap, obs, ctx, backend=cfg.backend)
+        q = critic_forward(critic, obs, a, ctx, backend=cfg.backend)
+        return -jnp.mean(q), ctx.finalize()
+
+    (aloss, qat2), agrads = jax.value_and_grad(actor_loss, has_aux=True)(
+        state.actor)
+    opt_cfg_a = (fxp_adam.FxpAdamConfig(lr=cfg.actor_lr) if cfg.fxp_weights
+                 else adam.AdamConfig(lr=cfg.actor_lr))
+    if cfg.fxp_weights:
+        agrads = quantize_grads(agrads)
+    actor, actor_opt, _ = upd_fn(opt_cfg_a, agrads, state.actor_opt,
+                                 state.actor)
+
+    # ---- soft target update -------------------------------------------------
+    soft = lambda t, o: jax.tree.map(
+        lambda a, b: (1 - cfg.tau) * a + cfg.tau * b, t, o)
+    new_state = DDPGState(
+        actor=actor, critic=critic,
+        actor_target=soft(state.actor_target, actor),
+        critic_target=soft(state.critic_target, critic),
+        actor_opt=actor_opt, critic_opt=critic_opt,
+        qat=qat2.tick(), step=state.step + 1)
+    metrics = {"critic_loss": closs, "actor_loss": aloss,
+               "q_mean": jnp.mean(y)}
+    return new_state, metrics

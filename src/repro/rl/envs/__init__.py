@@ -1,0 +1,2 @@
+from repro.rl.envs.base import Env, EnvSpec, EnvState, auto_reset
+from repro.rl.envs.locomotion import make, REGISTRY

@@ -1,0 +1,58 @@
+"""Pure-JAX environment interface (the host-CPU MuJoCo of the paper,
+re-homed onto the accelerator — see DESIGN.md §2).
+
+Every env is a pair of pure functions over an explicit state pytree, so the
+whole env batch can live on-device, be vmapped, and be fused into the
+training step (the 'fused' loop mode), or be stepped from the host (the
+'host' loop mode reproducing the paper's CPU↔FPGA round-trip and Fig. 9
+breakdown).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Protocol
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class EnvState:
+    q: Array        # generalized positions
+    qd: Array       # generalized velocities
+    t: Array        # timestep counter (i32)
+    key: Array      # per-env PRNG key
+
+
+@dataclasses.dataclass(frozen=True)
+class EnvSpec:
+    name: str
+    obs_dim: int
+    act_dim: int
+    episode_length: int = 1000   # paper: episode = 1000 timesteps
+
+
+class Env(Protocol):
+    spec: EnvSpec
+
+    def reset(self, key: Array) -> tuple[EnvState, Array]: ...
+
+    def step(self, state: EnvState, action: Array
+             ) -> tuple[EnvState, Array, Array, Array]:
+        """-> (new_state, obs, reward, done)"""
+
+
+def auto_reset(env: "Env", state: EnvState, action: Array):
+    """Step with automatic episode reset on done (standard RL plumbing)."""
+    new_state, obs, reward, done = env.step(state, action)
+    key_next, key_reset = jax.random.split(new_state.key)
+    reset_state, reset_obs = env.reset(key_reset)
+    new_state = dataclasses.replace(new_state, key=key_next)
+
+    sel = lambda a, b: jnp.where(done, b, a)
+    out_state = jax.tree.map(sel, new_state, reset_state)
+    out_obs = jnp.where(done, reset_obs, obs)
+    return out_state, out_obs, reward, done

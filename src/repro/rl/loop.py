@@ -1,0 +1,212 @@
+"""FIXAR's end-to-end DRL loop (operation sequence of Fig. 3).
+
+Two execution modes:
+
+  * ``host``  — paper-faithful: the environment steps outside the jitted
+    region (the paper's CPU-side MuJoCo), actions/batches cross an explicit
+    boundary each timestep, and we time the three Fig.-9 segments:
+    env time / transfer (dispatch) time / accelerator compute time.
+
+  * ``fused`` — TPU-idiomatic (beyond-paper): env, replay, and the DDPG
+    update all live in one jitted+scanned program; zero host round-trips.
+    This is the mode the roofline/§Perf numbers use and what one would
+    deploy on a real pod (the CPU-emulated env becomes a JAX env farm).
+
+Both share the same DDPG update, QAT state, and replay semantics.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.rl import ddpg, replay
+from repro.rl.envs.base import EnvState, auto_reset
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class LoopConfig:
+    total_steps: int = 10_000
+    warmup_steps: int = 1_000          # env steps before updates start
+    replay_capacity: int = 100_000
+    eval_every: int = 5_000            # paper: evaluate every 5000 timesteps
+    eval_episodes: int = 10            # paper: 10 random starts
+    n_envs: int = 1                    # fused mode can farm envs
+    seed: int = 0
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    agent: ddpg.DDPGState
+    env_state: EnvState
+    obs: Array
+    buf: replay.ReplayBuffer
+    key: Array
+
+
+def init_train_state(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig) -> TrainState:
+    key = jax.random.key(cfg.seed)
+    k_agent, k_env, k_loop = jax.random.split(key, 3)
+    agent = ddpg.init(k_agent, env.spec, dcfg)
+    if cfg.n_envs > 1:
+        env_keys = jax.random.split(k_env, cfg.n_envs)
+        env_state, obs = jax.vmap(env.reset)(env_keys)
+    else:
+        env_state, obs = env.reset(k_env)
+        obs = obs[None]
+    buf = replay.init(cfg.replay_capacity, env.spec.obs_dim, env.spec.act_dim)
+    return TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf,
+                      key=k_loop)
+
+
+def _one_timestep(ts: TrainState, env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
+                  ) -> tuple[TrainState, dict[str, Array]]:
+    key, k_noise, k_sample = jax.random.split(ts.key, 3)
+
+    # 1. actor forward (inference) + exploration noise  [FPGA FP + PRNG]
+    action = ddpg.act(ts.agent, ts.obs, cfg=dcfg, noise_key=k_noise)
+
+    # 2. environment transition                          [host CPU in paper]
+    if cfg.n_envs > 1:
+        env_state, next_obs, reward, done = jax.vmap(partial(auto_reset, env))(
+            ts.env_state, action)
+    else:
+        env_state, next_obs, reward, done = auto_reset(env, ts.env_state,
+                                                       action[0])
+        next_obs, reward, done = next_obs[None], reward[None], done[None]
+
+    # 3. store transition                                [host replay memory]
+    buf = replay.add(ts.buf, ts.obs, action, reward, next_obs, done)
+
+    # 4. sample batch + 5. critic/actor BP+WU            [FPGA training]
+    batch = replay.sample(buf, k_sample, dcfg.batch_size)
+
+    def do_update(agent):
+        new_agent, m = ddpg.update(agent, batch, dcfg)
+        return new_agent, m
+
+    def skip_update(agent):
+        zero = {"critic_loss": jnp.float32(0), "actor_loss": jnp.float32(0),
+                "q_mean": jnp.float32(0)}
+        return agent, zero
+
+    agent, metrics = jax.lax.cond(buf.size >= cfg.warmup_steps,
+                                  do_update, skip_update, ts.agent)
+    metrics["reward"] = jnp.mean(reward)
+    return TrainState(agent=agent, env_state=env_state, obs=next_obs,
+                      buf=buf, key=key), metrics
+
+
+def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
+                eval_fn: Optional[Callable] = None,
+                chunk: int = 1000) -> tuple[TrainState, dict[str, Any]]:
+    """Fused scan training. Returns final state + history of eval rewards."""
+    ts = init_train_state(env, cfg, dcfg)
+
+    @partial(jax.jit, donate_argnums=0)
+    def run_chunk(ts):
+        def body(carry, _):
+            carry, m = _one_timestep(carry, env, cfg, dcfg)
+            return carry, m["reward"]
+        ts, rewards = jax.lax.scan(body, ts, None, length=chunk)
+        return ts, jnp.mean(rewards)
+
+    history = {"step": [], "eval_reward": [], "train_reward": [], "ips": []}
+    steps_done = 0
+    while steps_done < cfg.total_steps:
+        t0 = time.perf_counter()
+        ts, mean_r = run_chunk(ts)
+        jax.block_until_ready(mean_r)
+        dt = time.perf_counter() - t0
+        steps_done += chunk
+        if steps_done % cfg.eval_every < chunk:
+            k_eval = jax.random.fold_in(jax.random.key(cfg.seed + 7), steps_done)
+            ev = evaluate(env, ts.agent, dcfg, k_eval, cfg.eval_episodes)
+            history["step"].append(steps_done)
+            history["eval_reward"].append(float(ev))
+            history["train_reward"].append(float(mean_r))
+            history["ips"].append(chunk * max(cfg.n_envs, 1) / dt)
+    return ts, history
+
+
+def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
+               ) -> tuple[TrainState, dict[str, Any]]:
+    """Paper-faithful host loop with the Fig.-9 timing breakdown.
+
+    Each timestep: host env step (CPU), device_put of the sampled batch
+    (the PCIe import), then the jitted inference+update (the accelerator).
+    """
+    ts = init_train_state(env, cfg, dcfg)
+    act_jit = jax.jit(partial(ddpg.act, cfg=dcfg))
+    upd_jit = jax.jit(partial(ddpg.update, cfg=dcfg))
+    sample_jit = jax.jit(partial(replay.sample, batch=dcfg.batch_size))
+    add_jit = jax.jit(replay.add)
+
+    times = {"env": 0.0, "runtime": 0.0, "accelerator": 0.0}
+    key = ts.key
+    agent, env_state, obs, buf = ts.agent, ts.env_state, ts.obs, ts.buf
+    for step in range(cfg.total_steps):
+        key, k_noise, k_sample = jax.random.split(key, 3)
+
+        t0 = time.perf_counter()
+        action = act_jit(agent, obs, noise_key=k_noise)
+        jax.block_until_ready(action)
+        t1 = time.perf_counter()
+
+        env_state, next_obs, reward, done = auto_reset(env, env_state,
+                                                       action[0])
+        jax.block_until_ready(next_obs)
+        t2 = time.perf_counter()
+
+        # replay add + batch sample + "PCIe import" (device transfer)
+        buf = add_jit(buf, obs, action, reward[None], next_obs[None],
+                      done[None])
+        batch = sample_jit(buf, k_sample)
+        batch = jax.device_put(batch)
+        jax.block_until_ready(batch)
+        t3 = time.perf_counter()
+
+        if int(buf.size) >= cfg.warmup_steps:
+            agent, _ = upd_jit(agent, batch)
+            jax.block_until_ready(agent.step)
+        t4 = time.perf_counter()
+
+        times["accelerator"] += (t1 - t0) + (t4 - t3)
+        times["env"] += t2 - t1
+        times["runtime"] += t3 - t2
+        obs = next_obs[None]
+
+    ts = TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, key=key)
+    return ts, {"times": times, "total_steps": cfg.total_steps}
+
+
+def evaluate(env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array,
+             n_episodes: int = 10) -> Array:
+    """Paper protocol: average cumulative reward over `n_episodes` random
+    starts, accumulating until the agent falls (done) or the episode ends."""
+    @jax.jit
+    def one_episode(k):
+        state, obs = env.reset(k)
+
+        def body(carry, _):
+            state, obs, total, alive = carry
+            a = ddpg.act(agent, obs[None], cfg=dcfg)[0]
+            state, obs, r, done = env.step(state, a)
+            total = total + r * alive
+            alive = alive * (1.0 - done.astype(jnp.float32))
+            return (state, obs, total, alive), None
+
+        (_, _, total, _), _ = jax.lax.scan(
+            body, (state, obs, jnp.float32(0), jnp.float32(1)), None,
+            length=env.spec.episode_length)
+        return total
+
+    keys = jax.random.split(key, n_episodes)
+    return jnp.mean(jax.vmap(one_episode)(keys))

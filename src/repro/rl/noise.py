@@ -1,0 +1,31 @@
+"""Exploration noise — the PRNG module of Fig. 2."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class OUState:
+    x: Array
+
+
+def ou_init(shape) -> OUState:
+    return OUState(x=jnp.zeros(shape, jnp.float32))
+
+
+def ou_step(state: OUState, key: Array, *, theta: float = 0.15,
+            sigma: float = 0.2, dt: float = 1e-2) -> tuple[OUState, Array]:
+    """Ornstein-Uhlenbeck process (DDPG's exploration noise)."""
+    noise = jax.random.normal(key, state.x.shape)
+    x = state.x + theta * (-state.x) * dt + sigma * jnp.sqrt(dt) * noise
+    return OUState(x=x), x
+
+
+def gaussian(key: Array, shape, sigma: float = 0.1) -> Array:
+    return sigma * jax.random.normal(key, shape)

@@ -1,0 +1,65 @@
+"""On-device ring-buffer replay (the host-side transition store of Fig. 2,
+moved on-device for the fused loop; the host loop keeps it on CPU arrays).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ReplayBuffer:
+    obs: Array        # (cap, obs_dim)
+    action: Array     # (cap, act_dim)
+    reward: Array     # (cap,)
+    next_obs: Array   # (cap, obs_dim)
+    done: Array       # (cap,)
+    ptr: Array        # i32 — next write slot
+    size: Array       # i32 — valid entries
+
+
+def init(capacity: int, obs_dim: int, act_dim: int) -> ReplayBuffer:
+    return ReplayBuffer(
+        obs=jnp.zeros((capacity, obs_dim), jnp.float32),
+        action=jnp.zeros((capacity, act_dim), jnp.float32),
+        reward=jnp.zeros((capacity,), jnp.float32),
+        next_obs=jnp.zeros((capacity, obs_dim), jnp.float32),
+        done=jnp.zeros((capacity,), jnp.bool_),
+        ptr=jnp.zeros((), jnp.int32),
+        size=jnp.zeros((), jnp.int32),
+    )
+
+
+def add(buf: ReplayBuffer, obs, action, reward, next_obs, done) -> ReplayBuffer:
+    """Add a batch of B transitions (B may be 1). Wraps modulo capacity."""
+    b = obs.shape[0]
+    cap = buf.obs.shape[0]
+    idx = (buf.ptr + jnp.arange(b)) % cap
+    return ReplayBuffer(
+        obs=buf.obs.at[idx].set(obs),
+        action=buf.action.at[idx].set(action),
+        reward=buf.reward.at[idx].set(reward),
+        next_obs=buf.next_obs.at[idx].set(next_obs),
+        done=buf.done.at[idx].set(done),
+        ptr=(buf.ptr + b) % cap,
+        size=jnp.minimum(buf.size + b, cap),
+    )
+
+
+def sample(buf: ReplayBuffer, key: Array, batch: int) -> dict[str, Array]:
+    """Uniform random batch of B transitions (paper: 'a random batch of B
+    transitions ... sampled in order to send to FPGA')."""
+    idx = jax.random.randint(key, (batch,), 0, jnp.maximum(buf.size, 1))
+    return {
+        "obs": buf.obs[idx],
+        "action": buf.action[idx],
+        "reward": buf.reward[idx],
+        "next_obs": buf.next_obs[idx],
+        "done": buf.done[idx],
+    }

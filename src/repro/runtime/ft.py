@@ -1,0 +1,149 @@
+"""Fault-tolerance control plane: heartbeats, straggler detection, elastic
+re-meshing.  (Host-side logic — exercised against a simulated cluster in
+tests/test_runtime.py; on a real deployment the heartbeat transport is the
+coordination service, everything else is unchanged.)
+
+Recovery story (DESIGN.md §5):
+  1. every host ticks `HeartbeatRegistry` each step;
+  2. `detect_failures` marks hosts silent for > timeout as dead;
+  3. `plan_elastic_mesh` picks the largest valid (data, model) mesh that fits
+     the survivors (model axis preserved — TP degree is baked into layouts;
+     data axis shrinks), keeping global batch via more grad accumulation;
+  4. the runner rebuilds shardings and `checkpoint.restore(...,
+     shardings=new)` resharding the last checkpoint;
+  5. `DataSkipAhead` replays the synthetic-data cursor to the restored step.
+
+Straggler mitigation: per-host step-time EMA; hosts slower than
+`threshold ×  median` get flagged; the runner either rebalances shard sizes
+(`rebalance_weights`) or excludes the host at the next elastic step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+import time
+from typing import Callable, Optional
+
+
+@dataclasses.dataclass
+class HostState:
+    host_id: int
+    last_beat: float = 0.0
+    step_time_ema: float = 0.0
+    beats: int = 0
+
+
+class HeartbeatRegistry:
+    def __init__(self, n_hosts: int, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.hosts = {i: HostState(i) for i in range(n_hosts)}
+        self.timeout_s = timeout_s
+        self.clock = clock
+
+    def beat(self, host_id: int, step_time_s: Optional[float] = None):
+        h = self.hosts[host_id]
+        h.last_beat = self.clock()
+        h.beats += 1
+        if step_time_s is not None:
+            m = 0.9 if h.step_time_ema else 0.0
+            h.step_time_ema = m * h.step_time_ema + (1 - m) * step_time_s
+
+    def detect_failures(self) -> list[int]:
+        now = self.clock()
+        return [i for i, h in self.hosts.items()
+                if h.beats > 0 and now - h.last_beat > self.timeout_s]
+
+    def detect_stragglers(self, threshold: float = 2.0) -> list[int]:
+        times = sorted(h.step_time_ema for h in self.hosts.values()
+                       if h.step_time_ema > 0)
+        if not times:
+            return []
+        median = times[len(times) // 2]
+        return [i for i, h in self.hosts.items()
+                if h.step_time_ema > threshold * median]
+
+    def remove(self, host_ids: list[int]):
+        for i in host_ids:
+            self.hosts.pop(i, None)
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    data: int
+    model: int
+    n_devices: int
+    grad_accum_factor: int   # extra microbatching to keep global batch
+
+
+def plan_elastic_mesh(surviving_devices: int, *, model_parallel: int = 16,
+                      original_data: int = 16) -> ElasticPlan:
+    """Largest (data, model_parallel) mesh fitting the survivors.
+
+    The model axis is preserved (changing TP degree would re-layout every
+    weight); the data axis shrinks to the largest power of two that fits,
+    and gradient accumulation scales up to hold the global batch constant.
+    """
+    if surviving_devices < model_parallel:
+        raise ValueError(
+            f"cannot keep model_parallel={model_parallel} with "
+            f"{surviving_devices} devices")
+    max_data = surviving_devices // model_parallel
+    data = 1 << (max_data.bit_length() - 1)          # floor pow2
+    accum = max(1, original_data // data)
+    return ElasticPlan(data=data, model=model_parallel,
+                       n_devices=data * model_parallel,
+                       grad_accum_factor=accum)
+
+
+def rebalance_weights(step_times: dict[int, float]) -> dict[int, float]:
+    """Work-share weights inversely proportional to measured step time
+    (slow host gets a smaller data shard).  Normalized to sum to 1."""
+    inv = {i: 1.0 / max(t, 1e-6) for i, t in step_times.items()}
+    z = sum(inv.values())
+    return {i: v / z for i, v in inv.items()}
+
+
+@dataclasses.dataclass
+class DataSkipAhead:
+    """Deterministic data-cursor restore: the synthetic pipeline is a pure
+    function of (seed, step), so skipping ahead is O(1) — no replayed or
+    dropped batches across restarts."""
+
+    seed: int
+    step: int = 0
+
+    def restore_to(self, step: int) -> "DataSkipAhead":
+        return dataclasses.replace(self, step=step)
+
+    def next_batch_key(self) -> tuple[int, int]:
+        key = (self.seed, self.step)
+        self.step += 1
+        return key
+
+
+class TrainingSupervisor:
+    """Orchestrates the detect -> plan -> restore loop (pure logic; the
+    runner wires in real meshes/checkpoints; tests simulate failures)."""
+
+    def __init__(self, n_hosts: int, devices_per_host: int,
+                 model_parallel: int = 16, timeout_s: float = 60.0,
+                 clock: Callable[[], float] = time.monotonic):
+        self.registry = HeartbeatRegistry(n_hosts, timeout_s, clock)
+        self.devices_per_host = devices_per_host
+        self.model_parallel = model_parallel
+        self.events: list[dict] = []
+
+    def step_report(self, host_id: int, step_time_s: float):
+        self.registry.beat(host_id, step_time_s)
+
+    def check(self) -> Optional[ElasticPlan]:
+        dead = self.registry.detect_failures()
+        if not dead:
+            return None
+        self.registry.remove(dead)
+        surviving = len(self.registry.hosts) * self.devices_per_host
+        plan = plan_elastic_mesh(surviving,
+                                 model_parallel=self.model_parallel)
+        self.events.append({"type": "elastic_rescale", "dead_hosts": dead,
+                            "plan": dataclasses.asdict(plan)})
+        return plan

@@ -1,0 +1,71 @@
+"""Serving engine: prefill + batched decode with KV caches / recurrent state.
+
+`serve_step` (one new token against a seq_len-deep cache) is the function
+the decode_32k / long_500k dry-run cells lower.  The engine also provides a
+simple generate() loop for the examples.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.parallelism import ShardingRules
+from repro.models import transformer as T
+from repro.models.config import ModelConfig
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+def make_serve_step(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
+                    unroll: bool = False):
+    """decode one token: (params, tokens(B,1), cache, pos) -> (logits, cache)."""
+
+    def serve_step(params, tokens, cache, pos):
+        logits, new_cache = T.decode_step(params, tokens, cache, pos, cfg,
+                                          rules=rules, unroll=unroll)
+        return logits, new_cache
+
+    return serve_step
+
+
+def make_prefill(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
+                 attn_chunk: int = 0, unroll: bool = False):
+    def prefill_step(params, batch):
+        return T.prefill(params, batch, cfg, rules=rules,
+                         attn_chunk=attn_chunk, unroll=unroll)
+    return prefill_step
+
+
+def generate(params: Params, cfg: ModelConfig, prompt: Array, max_new: int,
+             *, key: Optional[Array] = None, temperature: float = 0.0
+             ) -> Array:
+    """Greedy/sampled generation for the examples (CPU scale)."""
+    b, s = prompt.shape
+    max_seq = s + max_new
+    cache = T.init_cache(cfg, b, max_seq)
+    step = jax.jit(make_serve_step(cfg))
+
+    # feed the prompt token by token (simple path; prefill+cache-write is a
+    # serving optimization tracked in EXPERIMENTS.md §Perf)
+    logits = None
+    for i in range(s):
+        logits, cache = step(params, prompt[:, i:i + 1],
+                             cache, jnp.int32(i))
+
+    out = [prompt]
+    tok = None
+    for i in range(max_new):
+        if temperature > 0.0 and key is not None:
+            key, sub = jax.random.split(key)
+            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            tok = jnp.argmax(logits[:, -1], -1)
+        tok = tok[:, None].astype(jnp.int32)
+        out.append(tok)
+        logits, cache = step(params, tok, cache, jnp.int32(s + i))
+    return jnp.concatenate(out, axis=1)

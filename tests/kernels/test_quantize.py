@@ -1,0 +1,45 @@
+"""Fused monitor+quantize kernel vs oracle."""
+import hypothesis
+import hypothesis.extra.numpy as hnp
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.quantize.ops import monitor_quant
+from repro.kernels.quantize.ref import ref_monitor_quant
+
+SHAPES = [(64,), (7, 33), (256, 400), (3, 5, 17), (1, 1), (1024,)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("phase", [False, True])
+def test_kernel_matches_oracle(shape, phase):
+    x = jax.random.normal(jax.random.key(sum(shape)), shape) * 4
+    amin, amax = jnp.float32(-3.0), jnp.float32(3.5)
+    got = monitor_quant(x, amin, amax, jnp.array(phase))
+    want = ref_monitor_quant(x, amin, amax, jnp.array(phase))
+    for g, w, name in zip(got, want, ["y", "min", "max"]):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-6, atol=1e-6, err_msg=name)
+
+
+@hypothesis.given(hnp.arrays(np.float32, st.integers(1, 300),
+                             elements=st.floats(-50, 50, width=32)))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_monitor_is_exact_minmax(x):
+    """Monitoring phase: returned ranges = exact elementwise min/max folded
+    with the incoming ranges (padding never leaks in)."""
+    xj = jnp.asarray(x)
+    _, nmin, nmax = monitor_quant(xj, jnp.float32(1e30), jnp.float32(-1e30),
+                                  jnp.array(False))
+    assert np.isclose(float(nmin), float(x.min()))
+    assert np.isclose(float(nmax), float(x.max()))
+
+
+def test_monitoring_frozen_in_quant_phase():
+    x = jnp.array([100.0, -100.0])
+    _, nmin, nmax = monitor_quant(x, jnp.float32(-1.0), jnp.float32(1.0),
+                                  jnp.array(True))
+    assert float(nmin) == -1.0 and float(nmax) == 1.0

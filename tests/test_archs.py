@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, output shapes + no NaNs (task-spec deliverable (f))."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.optim import adam
+from repro.train.step import init_state, make_train_step
+
+B, S = 2, 64
+
+
+def _batch(cfg, key):
+    batch = {"labels": jax.random.randint(jax.random.fold_in(key, 1),
+                                          (B, S), 0, cfg.vocab_size)}
+    if cfg.frontend != "audio_stub":
+        batch["tokens"] = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_stub":
+        batch["frontend"] = jax.random.normal(
+            key, (B, cfg.frontend_len, cfg.frontend_dim))
+    if cfg.frontend == "audio_stub":
+        batch["frontend"] = jax.random.normal(key, (B, S, cfg.frontend_dim))
+    return batch
+
+
+@pytest.mark.parametrize("arch", registry.lm_archs())
+def test_forward_shapes_and_finite(arch):
+    cfg = registry.get_smoke(arch)
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    logits, _ = T.forward(params, batch, cfg)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", registry.lm_archs())
+def test_train_step_qat(arch):
+    """One QAT-enabled train step: loss finite, params finite, ranges move."""
+    cfg = dataclasses.replace(registry.get_smoke(arch), qat=True, qat_delay=2)
+    state = init_state(jax.random.key(0), cfg)
+    step = jax.jit(make_train_step(cfg, adam.AdamConfig(lr=1e-3,
+                                                        grad_clip_norm=1.0)))
+    batch = _batch(cfg, jax.random.key(1))
+    l0 = None
+    for _ in range(3):
+        state, metrics = step(state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        l0 = l0 or float(metrics["loss"])
+    assert float(metrics["loss"]) < l0  # optimizes on a repeated batch
+    assert all(bool(jnp.all(jnp.isfinite(x)))
+               for x in jax.tree.leaves(state.params))
+    stat = state.ranges["scan"][0]
+    first = jax.tree.leaves(stat)[1]
+    assert bool(jnp.all(jnp.isfinite(first))), "ranges never captured"
+
+
+@pytest.mark.parametrize("arch", ["qwen2_0_5b", "gemma3_1b", "rwkv6_1_6b",
+                                  "recurrentgemma_2b", "dbrx_132b"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode with caches == full forward (serving parity)."""
+    cfg = registry.get_smoke(arch)
+    params = T.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(2), (B, 8), 0, cfg.vocab_size)
+    full, _ = T.forward(params, {"tokens": toks}, cfg)
+    cache = T.init_cache(cfg, B, 16)
+    step = jax.jit(lambda p, t, c, i: T.decode_step(p, t, c, i, cfg))
+    outs = []
+    for i in range(8):
+        lg, cache = step(params, toks[:, i:i + 1], cache, jnp.int32(i))
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1).astype(jnp.float32)
+    scale = float(jnp.abs(full.astype(jnp.float32)).max())
+    assert float(jnp.abs(dec - full.astype(jnp.float32)).max()) \
+        < 0.05 * scale + 0.05
+
+
+def test_local_attention_masks_past_window():
+    """A token beyond the sliding window cannot influence the output."""
+    cfg = registry.get_smoke("gemma3_1b")  # window 32
+    params = T.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(3), (1, 48), 0, cfg.vocab_size)
+    toks2 = toks.at[0, 0].set((int(toks[0, 0]) + 7) % cfg.vocab_size)
+    l1, _ = T.forward(params, {"tokens": toks}, cfg)
+    l2, _ = T.forward(params, {"tokens": toks2}, cfg)
+    # position 47 is >window past position 0 BUT global layers still see it,
+    # and stacking local layers grows the receptive field by one window per
+    # layer — so restrict to a SINGLE local-attention layer:
+    import dataclasses as dc
+    from repro.models.config import ATTN_LOCAL
+    cfg_local = dc.replace(cfg, block_pattern=(ATTN_LOCAL,), n_layers=1)
+    params_l = T.init_params(jax.random.key(0), cfg_local)
+    l1, _ = T.forward(params_l, {"tokens": toks}, cfg_local)
+    l2, _ = T.forward(params_l, {"tokens": toks2}, cfg_local)
+    diff_far = float(jnp.abs(l1[0, 47] - l2[0, 47]).max())
+    diff_near = float(jnp.abs(l1[0, 0] - l2[0, 0]).max())
+    assert diff_near > 0.0
+    assert diff_far == 0.0
+
+
+def test_moe_load_balance_loss_positive():
+    cfg = registry.get_smoke("dbrx_132b")
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    _, extras = T.forward(params, batch, cfg)
+    assert float(extras["aux"]) > 0.0
+
+
+def test_unroll_matches_scan():
+    """Roofline-harness invariant: unrolled execution == scanned execution."""
+    cfg = registry.get_smoke("recurrentgemma_2b")
+    params = T.init_params(jax.random.key(0), cfg)
+    batch = _batch(cfg, jax.random.key(1))
+    a, _ = T.forward(params, batch, cfg, unroll=False)
+    b, _ = T.forward(params, batch, cfg, unroll=True)
+    # identical math; differences are bf16 re-association noise (few ulps)
+    assert jnp.allclose(a.astype(jnp.float32), b.astype(jnp.float32),
+                        atol=0.05, rtol=0.05)

@@ -1,0 +1,71 @@
+"""Algorithm 1 state-machine tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import fixedpoint as fxp
+from repro.core.qat import QATContext, QATState, quantize_weights
+
+
+def _step(st, x):
+    ctx = QATContext(st)
+    y = ctx.site("s", x)
+    return ctx.finalize().tick(), y
+
+
+def test_phase_flip_at_delay():
+    st = QATState.init(delay=3, sites=["s"])
+    step = jax.jit(_step)
+    xs = jax.random.normal(jax.random.key(0), (6, 64)) * 3
+    for t in range(6):
+        quant = bool(st.quantized_phase)
+        assert quant == (t >= 3)
+        st, y = step(st, xs[t])
+        err = float(jnp.abs(y - xs[t]).max())
+        if t < 3:  # Q15.16 lattice: error <= 2^-17
+            assert err <= 2 ** -16
+        else:      # 16-bit affine with captured ranges: coarser
+            assert err > 2 ** -16
+
+
+def test_ranges_frozen_after_delay():
+    st = QATState.init(delay=2, sites=["s"])
+    step = jax.jit(_step)
+    small = jnp.ones((8,)) * 0.5
+    big = jnp.ones((8,)) * 100.0
+    st, _ = step(st, small)
+    st, _ = step(st, -small)
+    frozen_min = float(st.ranges["s"].a_min)
+    frozen_max = float(st.ranges["s"].a_max)
+    st, _ = step(st, big)  # t=2: quantized phase, must NOT widen ranges
+    assert float(st.ranges["s"].a_min) == frozen_min
+    assert float(st.ranges["s"].a_max) == frozen_max
+
+
+def test_monitoring_tracks_minmax():
+    st = QATState.init(delay=100, sites=["s"])
+    step = jax.jit(_step)
+    st, _ = step(st, jnp.array([1.0, -2.0]))
+    st, _ = step(st, jnp.array([5.0, 0.0]))
+    assert float(st.ranges["s"].a_min) == -2.0
+    assert float(st.ranges["s"].a_max) == 5.0
+
+
+def test_weights_stay_fxp32():
+    """Weights projected to Q15.16 regardless of activation phase."""
+    w = {"w": jnp.array([0.123456789, -3.99999])}
+    q = quantize_weights(w)
+    raw = np.asarray(q["w"]) * 2 ** 16
+    assert np.allclose(raw, np.round(raw), atol=1e-3)
+
+
+def test_quantized_phase_16bit_grid():
+    """Post-delay activations land on the captured affine grid."""
+    st = QATState.init(delay=1, sites=["s"])
+    step = jax.jit(_step)
+    st, _ = step(st, jnp.linspace(-4.0, 4.0, 64))  # capture [-4, 4]
+    st, y = step(st, jnp.linspace(-4.0, 4.0, 64))
+    delta, z = fxp.affine_params(st.ranges["s"].a_min,
+                                 st.ranges["s"].a_max, 16)
+    codes = np.asarray(y) / float(delta)
+    assert np.allclose(codes, np.round(codes), atol=1e-3)

@@ -1,0 +1,30 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.rl import replay
+
+
+def test_add_and_sample():
+    buf = replay.init(16, 3, 2)
+    obs = jnp.arange(12, dtype=jnp.float32).reshape(4, 3)
+    act = jnp.ones((4, 2))
+    buf = replay.add(buf, obs, act, jnp.ones((4,)), obs + 1,
+                     jnp.zeros((4,), jnp.bool_))
+    assert int(buf.size) == 4 and int(buf.ptr) == 4
+    batch = replay.sample(buf, jax.random.key(0), 8)
+    assert batch["obs"].shape == (8, 3)
+    # sampled indices must come from the filled region
+    assert float(batch["obs"].max()) <= 11.0
+
+
+def test_ring_wraparound():
+    buf = replay.init(4, 1, 1)
+    for i in range(6):
+        buf = replay.add(buf, jnp.full((1, 1), float(i)), jnp.zeros((1, 1)),
+                         jnp.zeros((1,)), jnp.zeros((1, 1)),
+                         jnp.zeros((1,), jnp.bool_))
+    assert int(buf.size) == 4
+    assert int(buf.ptr) == 2
+    vals = sorted(np.asarray(buf.obs).ravel().tolist())
+    assert vals == [2.0, 3.0, 4.0, 5.0]  # oldest overwritten

@@ -1,0 +1,77 @@
+"""Fault-tolerance control-plane tests (simulated cluster)."""
+import pytest
+
+from repro.runtime import ft
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_heartbeat_failure_detection():
+    clock = FakeClock()
+    reg = ft.HeartbeatRegistry(4, timeout_s=10, clock=clock)
+    for i in range(4):
+        reg.beat(i)
+    clock.t = 5.0
+    for i in (0, 1, 2):
+        reg.beat(i)
+    clock.t = 12.0
+    assert reg.detect_failures() == [3]
+
+
+def test_straggler_detection():
+    reg = ft.HeartbeatRegistry(4, timeout_s=100)
+    for _ in range(5):
+        for i in range(4):
+            reg.beat(i, step_time_s=1.0 if i != 2 else 5.0)
+    assert reg.detect_stragglers(threshold=2.0) == [2]
+
+
+def test_elastic_plan_preserves_model_parallel():
+    plan = ft.plan_elastic_mesh(240, model_parallel=16, original_data=16)
+    assert plan.model == 16
+    assert plan.data == 8            # floor pow2 of 240//16=15
+    assert plan.n_devices == 128
+    assert plan.grad_accum_factor == 2   # keeps global batch
+
+
+def test_elastic_plan_rejects_too_few():
+    with pytest.raises(ValueError):
+        ft.plan_elastic_mesh(8, model_parallel=16)
+
+
+def test_rebalance_weights_inverse_to_speed():
+    w = ft.rebalance_weights({0: 1.0, 1: 2.0})
+    assert w[0] > w[1]
+    assert abs(sum(w.values()) - 1.0) < 1e-9
+
+
+def test_supervisor_rescale_flow():
+    clock = FakeClock()
+    sup = ft.TrainingSupervisor(n_hosts=4, devices_per_host=64,
+                                model_parallel=16, timeout_s=10, clock=clock)
+    for i in range(4):
+        sup.step_report(i, 1.0)
+    assert sup.check() is None
+    clock.t = 20.0
+    for i in (0, 1, 2):
+        sup.step_report(i, 1.0)
+    clock.t = 25.0  # host 3 silent for 25s > timeout; 0-2 beat 5s ago
+    plan = sup.check()
+    # 3 surviving hosts x 64 = 192 devices; data shrinks to floor-pow2(12)=8
+    assert plan is not None and plan.n_devices == 128
+    assert plan.grad_accum_factor == 2
+    assert sup.events[0]["type"] == "elastic_rescale"
+
+
+def test_data_skip_ahead_deterministic():
+    c1 = ft.DataSkipAhead(seed=7)
+    keys = [c1.next_batch_key() for _ in range(5)]
+    c2 = ft.DataSkipAhead(seed=7).restore_to(3)
+    assert c2.next_batch_key() == keys[3]
+    assert c2.next_batch_key() == keys[4]
