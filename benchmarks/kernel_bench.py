@@ -1,9 +1,16 @@
 """§V-C microbench — the configurable-datapath PE claim in numbers:
 half-precision mode must cost ~half the MAC work of full-precision mode.
 
+Plus the network-resident fused MLP comparison: the whole paper-actor
+forward in ONE Pallas call (kernels/fxp_mlp) vs the 3-call per-layer
+`fxp_dense` chain, both precision phases, with the acting-path IPS for each
+DDPG backend.  Results land in `BENCH_fused_mlp.json` at the repo root so
+the perf trajectory is tracked across PRs.
+
 On CPU (interpret) we measure wall time AND verify the structural 2× via
-`ref_flops`; on a real TPU the same harness times the Mosaic kernel.
+`ref_flops`; on a real TPU the same harness times the Mosaic kernels.
 """
+import json
 import pathlib
 import sys
 
@@ -12,6 +19,7 @@ if str(_REPO) not in sys.path:
     sys.path.insert(0, str(_REPO))
 
 import jax
+import jax.numpy as jnp
 
 from benchmarks.common import emit, time_fn
 
@@ -19,6 +27,110 @@ from repro.kernels.fxp_matmul.ops import fxp_dense
 from repro.kernels.fxp_matmul.ref import ref_flops
 
 SHAPES = [(256, 400, 300), (512, 1024, 1024), (64, 17, 400)]
+
+FUSED_JSON = _REPO / "BENCH_fused_mlp.json"
+ACTOR_BATCH = 256
+
+
+def _count_pallas_calls(fn, *args) -> int:
+    """Traced pallas_call count, recursing into cond/pjit sub-jaxprs —
+    the per-layer path traces BOTH precision kernels per layer (lax.cond),
+    the fused path traces exactly one."""
+    def subs(v):
+        vals = v if isinstance(v, (tuple, list)) else [v]
+        for item in vals:
+            if hasattr(item, "eqns"):            # Jaxpr
+                yield item
+            elif hasattr(item, "jaxpr"):         # ClosedJaxpr
+                yield item.jaxpr
+
+    def count(jx) -> int:
+        n = 0
+        for eqn in jx.eqns:
+            if eqn.primitive.name == "pallas_call":
+                n += 1
+            for v in eqn.params.values():
+                n += sum(count(s) for s in subs(v))
+        return n
+
+    return count(jax.make_jaxpr(fn)(*args).jaxpr)
+
+
+def bench_fused_mlp() -> dict:
+    """Fused whole-network kernel vs the per-layer fxp_dense chain."""
+    from repro.rl import ddpg
+    from repro.rl.envs.locomotion import make
+    from repro.core.qat import QATContext
+
+    env = make("halfcheetah")
+    dims = [env.spec.obs_dim, *ddpg.HIDDEN, env.spec.act_dim]
+    cfg = ddpg.DDPGConfig()
+    state = ddpg.init(jax.random.key(0), env.spec, cfg)
+    obs = jax.random.normal(jax.random.key(1), (ACTOR_BATCH, dims[0]))
+
+    def forward(backend, qat_state):
+        @jax.jit
+        def f(params, x):
+            return ddpg.actor_forward(params, x, QATContext(qat_state),
+                                      backend=backend)
+        return f
+
+    report = {
+        "schema": "fixar/fused_mlp_bench/v1",
+        "config": {"batch": ACTOR_BATCH, "net": dims,
+                   "backend": jax.default_backend()},
+        "pallas_calls_traced": {},
+        "phases": {},
+        "actor_ips": {},
+    }
+
+    # traced-call structure: fused = 1 kernel for the whole network;
+    # per-layer = 2 kernels traced per layer (cond), len(dims)-1 executed
+    fused_calls = _count_pallas_calls(forward("pallas", state.qat),
+                                      state.actor, obs)
+    layer_calls = _count_pallas_calls(forward("pallas_layer", state.qat),
+                                      state.actor, obs)
+    report["pallas_calls_traced"] = {
+        "fused": fused_calls,
+        "perlayer": layer_calls,
+        "perlayer_executed": len(dims) - 1,
+    }
+    emit("kernel/fxp_mlp/actor/pallas_calls", 0.0,
+         f"fused={fused_calls};perlayer_traced={layer_calls};"
+         f"perlayer_executed={len(dims) - 1}")
+
+    # wall-clock, both phases (full precision pre-delay, half after)
+    import dataclasses
+    for phase_name, step in (("full", 0), ("half", 10)):
+        qat = dataclasses.replace(state.qat, step=jnp.array(step, jnp.int32),
+                                  config=dataclasses.replace(
+                                      state.qat.config, delay=5))
+        res = {}
+        for mode, backend in (("fused", "pallas"),
+                              ("perlayer", "pallas_layer")):
+            f = forward(backend, qat)
+            us = time_fn(lambda f=f: f(state.actor, obs), iters=5, warmup=2)
+            res[f"{mode}_us"] = us
+            emit(f"kernel/fxp_mlp/actor/{phase_name}/{mode}", us,
+                 f"batch={ACTOR_BATCH}")
+        res["speedup"] = res["perlayer_us"] / res["fused_us"]
+        report["phases"][phase_name] = res
+        emit(f"kernel/fxp_mlp/actor/{phase_name}/speedup", 0.0,
+             f"fused_vs_perlayer={res['speedup']:.2f}x")
+
+    # acting-path IPS (the env-interaction side of the training loop)
+    for backend in ("jnp", "pallas", "pallas_layer"):
+        bcfg = dataclasses.replace(cfg, backend=backend)
+        act = jax.jit(lambda s, o: ddpg.act(s, o, cfg=bcfg))
+        us = time_fn(lambda: act(state, obs), iters=5, warmup=2)
+        ips = ACTOR_BATCH / (us * 1e-6)
+        report["actor_ips"][backend] = ips
+        emit(f"kernel/fxp_mlp/act_ips/{backend}", us,
+             f"ips={ips:.0f};batch={ACTOR_BATCH}")
+
+    FUSED_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    emit("kernel/fxp_mlp/json", 0.0, f"wrote={FUSED_JSON.name}")
+    return report
 
 
 def main(argv=None):
@@ -37,6 +149,7 @@ def main(argv=None):
         ratio = res["full"][1] / res["half"][1]
         emit(f"kernel/fxp_dense/{m}x{k}x{n}/flop_ratio", 0.0,
              f"full_vs_half={ratio:.1f}x (paper claims 2x)")
+    bench_fused_mlp()
 
 
 if __name__ == "__main__":

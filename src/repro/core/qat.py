@@ -44,7 +44,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixedpoint as fxp
-from repro.core.ranges import RangeStat, finalized, init_ranges, update_ema, update_minmax
+from repro.core.ranges import (RangeStat, finalized, init_ranges,
+                               update_ema_scalar, update_minmax_scalar)
 
 Array = jax.Array
 
@@ -114,21 +115,51 @@ class QATContext:
             raise KeyError(
                 f"QAT site {name!r} not registered; known: "
                 f"{sorted(self.state.ranges)[:8]}...")
-        stat = self._new_ranges[name]
-        quant_phase = self.state.quantized_phase
-
         # --- phase 1: monitor ranges (only counts pre-delay updates) -------
-        upd = update_minmax if cfg.monitor == "minmax" else update_ema
-        cand = upd(stat, jax.lax.stop_gradient(x))
-        new_stat = jax.tree.map(
-            lambda old, new: jnp.where(quant_phase, old, new), stat, cand)
-        self._new_ranges[name] = new_stat
+        self.observe(name, jnp.min(x), jnp.max(x))
+        new_stat = self._new_ranges[name]
 
         # --- produce the activation both ways, select by phase -------------
         a_min, a_max = finalized(new_stat)
         x_q16 = fxp.fake_quant_affine(x, a_min, a_max, cfg.n_bits)
         x_full = fxp.fake_quant(x, fxp.FXP32) if cfg.fxp32_phase1 else x
-        return jnp.where(quant_phase, x_q16, x_full)
+        return jnp.where(self.state.quantized_phase, x_q16, x_full)
+
+    def observe(self, name: str, mn: Array, mx: Array) -> None:
+        """Fold externally-computed site extrema into the running ranges.
+
+        The out-of-graph half of `site()` for kernels that monitor ranges
+        on-chip (kernels/fxp_mlp): the fused kernel hands back exact per-site
+        (min, max) scalars and this applies the same phase-gated update the
+        inline site would have.
+        """
+        cfg = self.state.config
+        if not cfg.enabled:
+            return
+        if name not in self.state.ranges:
+            raise KeyError(
+                f"QAT site {name!r} not registered; known: "
+                f"{sorted(self.state.ranges)[:8]}...")
+        stat = self._new_ranges[name]
+        upd = (update_minmax_scalar if cfg.monitor == "minmax"
+               else update_ema_scalar)
+        cand = upd(stat, jax.lax.stop_gradient(mn), jax.lax.stop_gradient(mx))
+        self._new_ranges[name] = jax.tree.map(
+            lambda old, new: jnp.where(self.state.quantized_phase, old, new),
+            stat, cand)
+
+    def site_quant_params(self, names: list[str]) -> tuple[Array, Array]:
+        """Stacked (deltas, zs) affine params for a list of sites, computed
+        from the current finalized ranges — the per-site scalars the fused
+        MLP kernel consumes in its quantized phase."""
+        cfg = self.state.config
+        deltas, zs = [], []
+        for name in names:
+            a_min, a_max = finalized(self._new_ranges[name])
+            d, z = fxp.affine_params(a_min, a_max, cfg.n_bits)
+            deltas.append(d)
+            zs.append(z.astype(jnp.float32))
+        return jnp.stack(deltas), jnp.stack(zs)
 
     def finalize(self) -> QATState:
         return dataclasses.replace(self.state, ranges=self._new_ranges)

@@ -38,23 +38,34 @@ class RangeStat:
         )
 
 
-def update_minmax(stat: RangeStat, x: Array) -> RangeStat:
-    """Paper-faithful running min/max."""
+def update_minmax_scalar(stat: RangeStat, mn: Array, mx: Array) -> RangeStat:
+    """Fold pre-reduced extrema (e.g. from the fused MLP kernel's on-chip
+    monitor) into the running min/max."""
     return RangeStat(
-        a_min=jnp.minimum(stat.a_min, jnp.min(x)).astype(jnp.float32),
-        a_max=jnp.maximum(stat.a_max, jnp.max(x)).astype(jnp.float32),
+        a_min=jnp.minimum(stat.a_min, mn).astype(jnp.float32),
+        a_max=jnp.maximum(stat.a_max, mx).astype(jnp.float32),
         count=stat.count + 1,
     )
 
 
-def update_ema(stat: RangeStat, x: Array, momentum: float = 0.99) -> RangeStat:
-    """EMA variant (beyond-paper option, robust to outlier spikes)."""
-    mn, mx = jnp.min(x), jnp.max(x)
+def update_minmax(stat: RangeStat, x: Array) -> RangeStat:
+    """Paper-faithful running min/max."""
+    return update_minmax_scalar(stat, jnp.min(x), jnp.max(x))
+
+
+def update_ema_scalar(stat: RangeStat, mn: Array, mx: Array,
+                      momentum: float = 0.99) -> RangeStat:
+    """EMA fold of pre-reduced extrema (see update_minmax_scalar)."""
     first = stat.count == 0
     new_min = jnp.where(first, mn, momentum * stat.a_min + (1 - momentum) * mn)
     new_max = jnp.where(first, mx, momentum * stat.a_max + (1 - momentum) * mx)
     return RangeStat(new_min.astype(jnp.float32), new_max.astype(jnp.float32),
                      stat.count + 1)
+
+
+def update_ema(stat: RangeStat, x: Array, momentum: float = 0.99) -> RangeStat:
+    """EMA variant (beyond-paper option, robust to outlier spikes)."""
+    return update_ema_scalar(stat, jnp.min(x), jnp.max(x), momentum)
 
 
 def finalized(stat: RangeStat) -> tuple[Array, Array]:
@@ -72,4 +83,5 @@ def init_ranges(site_names: list[str]) -> dict[str, RangeStat]:
     return {name: RangeStat.init() for name in site_names}
 
 
-__all__ = ["RangeStat", "update_minmax", "update_ema", "finalized", "init_ranges"]
+__all__ = ["RangeStat", "update_minmax", "update_minmax_scalar", "update_ema",
+           "update_ema_scalar", "finalized", "init_ranges"]

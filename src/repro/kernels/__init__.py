@@ -1,6 +1,8 @@
 """Pallas TPU kernels for FIXAR's compute hot-spots.
 
 fxp_matmul — dual-precision dense layer (AAP core + configurable-datapath PE)
+fxp_mlp    — network-resident fused MLP: whole actor/critic forward in one
+             call, weights VMEM-resident, QAT sites fused between layers
 quantize   — fused activation range monitor + Q_n quantizer (Algorithm 1)
 attention  — flash attention for the LM serve path (beyond-paper extension)
 

@@ -1,0 +1,13 @@
+"""jax-version compat shims and tiny helpers shared by the kernel modules."""
+from jax.experimental.pallas import tpu as pltpu
+
+# jax 0.4.x names this TPUCompilerParams; newer releases renamed it.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
+
+def round_up(x: int, m: int) -> int:
+    """Round x up to a multiple of m (tile padding)."""
+    return (x + m - 1) // m * m
+
+
+__all__ = ["CompilerParams", "round_up"]

@@ -14,14 +14,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels._compat import round_up as _round_up
 from repro.kernels.fxp_matmul.kernel import fxp_dense_pallas
 from repro.kernels.fxp_matmul.ref import limb_split
 
 Array = jax.Array
-
-
-def _round_up(x: int, m: int) -> int:
-    return (x + m - 1) // m * m
 
 
 def _auto_blocks(m: int, k: int, n: int) -> tuple[int, int, int]:
@@ -59,8 +56,9 @@ def fxp_dense(x: Array, w: Array, b: Optional[Array] = None, *,
     wp = jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n)))
     bp = None if b is None else jnp.pad(b.astype(jnp.float32), (0, np_ - n))
 
-    hi, lo = limb_split(x2)
-    out = fxp_dense_pallas(hi, lo if full_precision else None, wp, bp,
+    # half mode only consumes the hi limb — skip the dead lo computation
+    hi, lo = limb_split(x2, with_lo=full_precision)
+    out = fxp_dense_pallas(hi, lo, wp, bp,
                            full_precision=full_precision,
                            activation=activation,
                            bm=bm, bn=bn, bk=bk, interpret=interpret)

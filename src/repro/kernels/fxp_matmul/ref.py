@@ -38,9 +38,17 @@ _ACTIVATIONS = {
 }
 
 
-def limb_split(x: Array) -> tuple[Array, Array]:
-    """Exact hi/lo split: hi = bf16 image of x, lo = residual (both f32)."""
+def limb_split(x: Array, with_lo: bool = True
+               ) -> tuple[Array, Optional[Array]]:
+    """Exact hi/lo split: hi = bf16 image of x, lo = residual (both f32).
+
+    with_lo=False skips the residual (returns None): half-precision mode
+    only consumes the hi limb, so the lo subtraction is dead work on the
+    hot quantized path.
+    """
     hi = x.astype(jnp.bfloat16).astype(jnp.float32)
+    if not with_lo:
+        return hi, None
     lo = (x - hi).astype(jnp.float32)
     return hi, lo
 

@@ -1,0 +1,55 @@
+"""Network-resident fused MLP kernel — whole actor/critic forward in ONE
+Pallas call (FIXAR's "entire model on-chip" regime, §V).
+
+Why
+---
+FIXAR's headline throughput comes from keeping the *whole* DDPG network in
+BRAM: weights never leave the chip and activations pipeline layer-to-layer
+without a memory round-trip.  The per-layer path (`kernels/fxp_matmul` +
+`kernels/quantize`) instead pays, per layer: a pad/unpad, an HBM activation
+round-trip, a limb split, a separate range-monitor sweep, and — in
+`rl/ddpg.py` — a `lax.cond` that traces BOTH precision kernels.  For DDPG's
+tiny layers (K <= 421) that launch overhead dominates; this module removes
+all of it.
+
+Design
+------
+* **VMEM residency**: every layer's weight block uses a constant index map
+  `(0, 0)`, so Pallas keeps all weights resident in VMEM for the whole grid
+  (= the BRAM weight memory).  Budget for the paper's actor
+  (obs->400->300->act, padded to 128 lanes): 512x512 + 512x384 + 384x128
+  f32 weights ~ 2.0 MB, plus a 128-row activation block (256 KB) and the
+  (128, 512) f32 accumulator scratch (256 KB) — < 3 MB of the ~16 MB VMEM,
+  leaving room for double buffering.
+* **Grid layout**: a 1-D grid over batch blocks (`bm = min(128,
+  round_up(M, 8))` rows each), declared `parallel` — the paper's intra-batch
+  dataflow.  Each grid step runs the ENTIRE L-layer forward for its rows;
+  inter-layer activations live in registers/VMEM and never touch HBM.
+* **Fused QAT sites**: the Algorithm-1 range monitor + phase-selected
+  quantizer (`kernels/quantize` semantics) runs inline on each layer input:
+  per-block masked min/max are written to a `(n_blocks, L)` output (reduced
+  to per-site scalars by the wrapper, then folded into `QATState` ranges by
+  `QATContext.observe`), and the activation is projected onto the Q15.16
+  lattice (monitor phase) or the captured n-bit affine lattice (quantized
+  phase).
+* **Dual precision via scalar-prefetch phase flag**: the QAT phase bit rides
+  in as the scalar-prefetch argument (SMEM, available before the body runs).
+  The hi-limb MAC pass always issues; the lo-limb pass is predicated on
+  `pl.when(phase == 0)` — full precision costs two MXU passes per layer,
+  the quantized phase one, inside a single traced kernel.  This replaces the
+  `lax.cond` over two whole `pallas_call`s.
+* **Fused epilogue**: bias + ReLU/tanh happen on the accumulator before the
+  next layer consumes it (the paper's accumulator -> activation-unit
+  pipeline).
+
+Files: `kernel.py` (pallas_call + grid spec), `ops.py` (jitted public
+wrapper, padding + range reduction), `ref.py` (pure-jnp per-layer oracle).
+The per-layer `fxp_dense` chain stays available as the reference/fallback
+(`backend="pallas_layer"` in `rl/ddpg.py`); parity is asserted in
+tests/kernels/test_fxp_mlp.py.  The kernel is forward/inference only — the
+training graph (`backend="jnp"`) stays differentiable.
+"""
+from repro.kernels.fxp_mlp.ops import fxp_mlp_forward
+from repro.kernels.fxp_mlp.ref import ref_fxp_mlp
+
+__all__ = ["fxp_mlp_forward", "ref_fxp_mlp"]

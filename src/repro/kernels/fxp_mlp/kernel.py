@@ -1,0 +1,170 @@
+"""Pallas TPU kernel: N-layer dual-precision MLP forward in one call.
+
+See the package docstring (`kernels/fxp_mlp/__init__.py`) for the design
+rationale.  Layout summary:
+
+  grid            (M_padded // bm,)        "parallel" — batch blocks
+  scalar prefetch phase: (1,) i32          QAT phase flag (0 = full, 1 = quant)
+  inputs          x (M, K0) blocked by row; per-layer w (Kp, Np) and
+                  b (1, Np) with constant index maps (VMEM-resident);
+                  deltas/zs (L,) f32 in SMEM (per-site affine params)
+  outputs         y (M, NL); per-block site mins/maxs (n_blocks, L)
+  scratch         f32 accumulator (bm, max Np)
+
+Shapes must be pre-padded: rows to bm, every feature dim to 128 lanes.
+Padding is engineered to be self-preserving: padded weight columns and bias
+entries are zero, so padded activations stay exactly 0 through ReLU/tanh and
+both quantizers (the affine grid contains 0 exactly — see
+core/fixedpoint.affine_params), and padded rows/cols are masked out of the
+range monitor with static index arithmetic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.fixedpoint import FXP32
+from repro.kernels._compat import CompilerParams
+
+Array = jax.Array
+
+
+def _site_project(x, quant, delta, z, *, n_bits: int, fxp32_phase1: bool):
+    """Algorithm-1 activation projection, selected by the phase flag.
+
+    Matches `kernels/quantize` / `QATContext.site` value semantics exactly:
+    quant phase  -> affine n-bit fake-quant with the captured ranges,
+    monitor phase-> Q15.16 lattice projection (or identity if disabled).
+    """
+    q_max = jnp.float32((1 << n_bits) - 1)
+    q = jnp.clip(jnp.round(x / delta) + z, 0.0, q_max)
+    y_quant = (q - z) * delta
+    if fxp32_phase1:
+        s32 = jnp.float32(2.0 ** FXP32.frac_bits)
+        y_full = jnp.round(jnp.clip(x * s32, jnp.float32(FXP32.raw_min),
+                                    jnp.float32(FXP32.raw_max))) / s32
+    else:
+        y_full = x
+    return jnp.where(quant, y_quant, y_full)
+
+
+def _mlp_kernel(phase_ref, *refs, n_layers: int, bm: int, m_valid: int,
+                in_dims: Sequence[int], activations: Sequence[str],
+                n_bits: int, qat: bool, fxp32_phase1: bool):
+    x_ref = refs[0]
+    wb_refs = refs[1:1 + 2 * n_layers]
+    deltas_ref = refs[1 + 2 * n_layers]
+    zs_ref = refs[2 + 2 * n_layers]
+    y_ref, mins_ref, maxs_ref = refs[3 + 2 * n_layers:6 + 2 * n_layers]
+    acc_ref = refs[6 + 2 * n_layers]
+
+    i = pl.program_id(0)
+    quant = phase_ref[0] > 0
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    row_ok = (i * bm + row_idx) < m_valid
+
+    x = x_ref[...]
+    for li in range(n_layers):  # unrolled: one pipelined body, L layers deep
+        w_ref, b_ref = wb_refs[2 * li], wb_refs[2 * li + 1]
+
+        # ---- fused range monitor on the site input (padding masked) -------
+        col_idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+        valid = jnp.logical_and(row_ok, col_idx < in_dims[li])
+        mins_ref[0, li] = jnp.min(jnp.where(valid, x, jnp.inf))
+        maxs_ref[0, li] = jnp.max(jnp.where(valid, x, -jnp.inf))
+
+        # ---- fused quantize site (phase-selected projection) --------------
+        if qat:
+            x = _site_project(x, quant, deltas_ref[li], zs_ref[li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+
+        # ---- dual-precision dense: hi pass always, lo pass predicated -----
+        hi = x.astype(jnp.bfloat16).astype(jnp.float32)
+        n_out_p = w_ref.shape[1]
+        acc_ref[:, :n_out_p] = jnp.dot(hi, w_ref[...],
+                                       preferred_element_type=jnp.float32)
+
+        def _lo_pass(x=x, hi=hi, w_ref=w_ref, n_out_p=n_out_p):
+            lo = x - hi  # residual limb: only materialized in full precision
+            acc_ref[:, :n_out_p] += jnp.dot(lo, w_ref[...],
+                                            preferred_element_type=jnp.float32)
+        pl.when(jnp.logical_not(quant))(_lo_pass)
+
+        # ---- fused epilogue: bias + activation on the accumulator ---------
+        out = acc_ref[:, :n_out_p] + b_ref[...]
+        actn = activations[li]
+        if actn == "relu":
+            out = jnp.maximum(out, 0.0)
+        elif actn == "tanh":
+            out = jnp.tanh(out)
+        x = out
+
+    y_ref[...] = x
+
+
+def fxp_mlp_pallas(phase: Array, x: Array, weights: Sequence[Array],
+                   biases: Sequence[Array], deltas: Array, zs: Array, *,
+                   activations: Sequence[str], in_dims: Sequence[int],
+                   m_valid: int, bm: int, n_bits: int, qat: bool,
+                   fxp32_phase1: bool, interpret: bool
+                   ) -> tuple[Array, Array, Array]:
+    """Raw pallas_call; shapes must already be padded (see module docstring).
+
+    phase: (1,) i32 scalar-prefetch flag.  x: (Mp, K0p) f32.
+    weights[i]: (Kp_i, Np_i) f32, biases[i]: (1, Np_i) f32.
+    deltas/zs: (L,) f32 per-site affine params (ignored when qat=False).
+    Returns (y (Mp, NLp), mins (n_blocks, L), maxs (n_blocks, L)).
+    """
+    n_layers = len(weights)
+    mp, k0p = x.shape
+    assert mp % bm == 0 and k0p == weights[0].shape[0]
+    for i in range(n_layers - 1):
+        assert weights[i].shape[1] == weights[i + 1].shape[0], (
+            f"layer {i}->{i + 1} padded dims disagree")
+    n_blocks = mp // bm
+    nlp = weights[-1].shape[1]
+    max_np = max(w.shape[1] for w in weights)
+
+    in_specs = [pl.BlockSpec((bm, k0p), lambda i, ph: (i, 0))]
+    args = [x]
+    for w, b in zip(weights, biases):
+        # constant index maps: weight/bias blocks revisit (0, 0) every grid
+        # step, so Pallas keeps them VMEM-resident across the whole call
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, ph: (0, 0)))
+        in_specs.append(pl.BlockSpec(b.shape, lambda i, ph: (0, 0)))
+        args.extend((w, b))
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # deltas
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # zs
+    args.extend((deltas, zs))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((bm, nlp), lambda i, ph: (i, 0)),
+            pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
+            pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
+        ],
+        scratch_shapes=[pltpu.VMEM((bm, max_np), jnp.float32)],
+    )
+    kern = functools.partial(
+        _mlp_kernel, n_layers=n_layers, bm=bm, m_valid=m_valid,
+        in_dims=tuple(in_dims), activations=tuple(activations),
+        n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1)
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((mp, nlp), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
+            jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
+        ],
+        compiler_params=CompilerParams(dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(phase, *args)

@@ -1,0 +1,92 @@
+"""Jitted public wrapper for the network-resident fused MLP kernel.
+
+`fxp_mlp_forward` pads the batch and every feature dimension to TPU tiles,
+dispatches the single fused Pallas kernel, unpads the result, and reduces the
+per-block range-monitor outputs to one (min, max) pair per QAT site — so a
+caller gets the whole actor/critic forward, QAT sites included, from ONE
+kernel launch instead of 2L+ (L dense + L quantize sweeps).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels._compat import round_up as _round_up
+from repro.kernels.fxp_mlp.kernel import fxp_mlp_pallas
+
+Array = jax.Array
+
+
+@functools.partial(jax.jit, static_argnames=("activations", "n_bits", "qat",
+                                             "fxp32_phase1", "interpret"))
+def fxp_mlp_forward(x: Array, weights: tuple, biases: tuple,
+                    deltas: Optional[Array] = None,
+                    zs: Optional[Array] = None, *,
+                    activations: Sequence[str], quant_phase: Array,
+                    n_bits: int = 16, qat: bool = True,
+                    fxp32_phase1: bool = True,
+                    interpret: Optional[bool] = None
+                    ) -> tuple[Array, Array, Array]:
+    """Fused L-layer MLP forward with inline QAT sites.
+
+    x: (..., K0) f32.  weights[i]: (K_i, N_i), biases[i]: (N_i,).
+    activations[i] in {"relu", "tanh", "none"} — fused epilogue per layer.
+    quant_phase: boolean scalar, the Algorithm-1 phase flag (False = monitor/
+    full precision, True = quantized/half precision).
+    deltas/zs: (L,) f32 per-site affine quantization params (from
+    `QATContext.site_quant_params`); ignored when qat=False.
+
+    Returns (y, site_mins, site_maxs): y is (..., N_L); site_mins/maxs are
+    (L,) exact extrema of each layer's (pre-quantization) input — feed them
+    to `QATContext.observe` to keep range monitoring identical to the
+    per-layer path.
+    """
+    n_layers = len(weights)
+    assert n_layers == len(biases) == len(activations), (
+        f"{n_layers} weights vs {len(biases)} biases vs "
+        f"{len(activations)} activations")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    orig_shape = x.shape
+    k0 = orig_shape[-1]
+    x2 = x.reshape(-1, k0).astype(jnp.float32)
+    m = x2.shape[0]
+    n_out = weights[-1].shape[-1]
+
+    # ---- padding: batch to bm rows, every feature dim to 128 lanes --------
+    bm = min(128, _round_up(m, 8))
+    mp = _round_up(m, bm)
+    in_dims = tuple(int(w.shape[0]) for w in weights)
+    assert in_dims[0] == k0
+    x2 = jnp.pad(x2, ((0, mp - m), (0, _round_up(k0, 128) - k0)))
+    wp, bp = [], []
+    for w, b in zip(weights, biases):
+        k, n = w.shape
+        kp, np_ = _round_up(k, 128), _round_up(n, 128)
+        wp.append(jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n))))
+        bp.append(jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_))
+
+    if not qat:
+        deltas = jnp.ones((n_layers,), jnp.float32)
+        zs = jnp.zeros((n_layers,), jnp.float32)
+    elif deltas is None or zs is None:
+        raise ValueError(
+            "qat=True requires both deltas and zs (from "
+            "QATContext.site_quant_params); pass qat=False for the "
+            "site-free pipeline")
+    deltas = jnp.asarray(deltas, jnp.float32).reshape(n_layers)
+    zs = jnp.asarray(zs, jnp.float32).reshape(n_layers)
+    phase = jnp.asarray(quant_phase, jnp.int32).reshape(1)
+
+    y, mins, maxs = fxp_mlp_pallas(
+        phase, x2, tuple(wp), tuple(bp), deltas, zs,
+        activations=tuple(activations), in_dims=in_dims, m_valid=m, bm=bm,
+        n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1,
+        interpret=interpret)
+
+    y = y[:m, :n_out].reshape(*orig_shape[:-1], n_out)
+    return y, jnp.min(mins, axis=0), jnp.max(maxs, axis=0)

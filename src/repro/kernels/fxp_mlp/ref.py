@@ -1,0 +1,60 @@
+"""Pure-jnp per-layer oracle for the fused MLP kernel.
+
+Chains the existing building blocks exactly the way `rl/ddpg.py`'s per-layer
+path does: per layer, an Algorithm-1 QAT site (range monitor + phase-selected
+projection, `core/fixedpoint` semantics) followed by the dual-precision dense
+oracle (`kernels/fxp_matmul/ref.ref_fxp_dense`) with the precision chosen by
+the same phase flag (full pre-delay, half after).  Tests assert the fused
+kernel matches this chain and, independently, the real `fxp_dense` +
+`monitor_quant` kernels.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fixedpoint as fxp
+from repro.kernels.fxp_matmul.ref import ref_fxp_dense
+
+Array = jax.Array
+
+
+def ref_fxp_mlp(x: Array, weights: Sequence[Array], biases: Sequence[Array],
+                *, activations: Sequence[str], quant_phase: Array,
+                a_mins: Optional[Array] = None,
+                a_maxs: Optional[Array] = None, n_bits: int = 16,
+                qat: bool = True, fxp32_phase1: bool = True
+                ) -> tuple[Array, Array, Array]:
+    """Oracle: returns (y, site_mins, site_maxs) like `fxp_mlp_forward`.
+
+    a_mins/a_maxs: (L,) finalized captured ranges per site (only consumed in
+    the quantized phase, mirroring `QATContext.site`).
+    """
+    n_layers = len(weights)
+    x = jnp.asarray(x, jnp.float32)
+    orig_shape = x.shape
+    x = x.reshape(-1, orig_shape[-1])
+    mins, maxs = [], []
+    for i in range(n_layers):
+        mins.append(jnp.min(x))
+        maxs.append(jnp.max(x))
+        if qat:
+            x_q = fxp.fake_quant_affine(x, a_mins[i], a_maxs[i], n_bits)
+            x_f = fxp.fake_quant(x, fxp.FXP32) if fxp32_phase1 else x
+            x = jnp.where(quant_phase, x_q, x_f)
+        y_full = ref_fxp_dense(x, weights[i], biases[i],
+                               full_precision=True, activation=activations[i])
+        y_half = ref_fxp_dense(x, weights[i], biases[i],
+                               full_precision=False, activation=activations[i])
+        x = jnp.where(quant_phase, y_half, y_full)
+    y = x.reshape(*orig_shape[:-1], weights[-1].shape[-1])
+    return y, jnp.stack(mins), jnp.stack(maxs)
+
+
+def ref_mlp_flops(m: int, dims: Sequence[int], full_precision: bool) -> int:
+    """MAC-pass FLOP model over the whole network (2x claim, summed)."""
+    passes = 2 if full_precision else 1
+    return sum(2 * m * dims[i] * dims[i + 1] * passes
+               for i in range(len(dims) - 1))

@@ -20,6 +20,8 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fixedpoint import FXP32
 
+from repro.kernels._compat import CompilerParams
+
 Array = jax.Array
 
 _BR, _BC = 8, 128  # f32 TPU tile
@@ -99,7 +101,7 @@ def monitor_quant_pallas(x2: Array, a_min: Array, a_max: Array,
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
             jax.ShapeDtypeStruct((1, 1), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("arbitrary",)),
         interpret=interpret,
     )(x2, a_min, a_max, phase, n_valid)

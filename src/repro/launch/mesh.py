@@ -10,14 +10,30 @@ from __future__ import annotations
 import jax
 
 
+def make_auto_mesh(shape, axes):
+    """jax.make_mesh with every axis in Auto mode, across jax versions:
+    jax >= 0.6 takes axis_types explicitly; older releases have no AxisType
+    and treat all axes as auto already."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+
+
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions: jax >= 0.6 has
+    jax.set_mesh; older releases enter the Mesh object itself."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips; `pod` composes with
     `data` for hierarchical data parallelism (DESIGN.md §5)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_auto_mesh(shape, axes)
 
 
 def make_debug_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = False):
@@ -26,5 +42,4 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = Fals
         shape, axes = (2, n_data, n_model), ("pod", "data", "model")
     else:
         shape, axes = (n_data, n_model), ("data", "model")
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return make_auto_mesh(shape, axes)

@@ -61,11 +61,12 @@ def main(argv=None):
     rules = None
     mesh_ctx = None
     if args.mesh != "none":
-        from repro.launch.mesh import make_debug_mesh, make_production_mesh
+        from repro.launch.mesh import (make_debug_mesh, make_production_mesh,
+                                       mesh_context)
         mesh = (make_debug_mesh() if args.mesh == "debug"
                 else make_production_mesh())
         rules = rules_for(mesh, "train")
-        mesh_ctx = jax.set_mesh(mesh)
+        mesh_ctx = mesh_context(mesh)
         mesh_ctx.__enter__()
 
     opt_cfg = adam.AdamConfig(

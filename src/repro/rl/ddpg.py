@@ -6,11 +6,17 @@ Both optimized with Adam, lr 1e-4 (paper), weights/grads projected onto the
 Q15.16 lattice every step (fixed-point weight & gradient memories, §III),
 activations run through QAT sites (Algorithm 1).
 
-`backend="jnp"` evaluates dense layers with jnp.dot on fake-quantized values
-(fast on CPU, identical semantics); `backend="pallas"` routes them through
-the dual-precision AAP-core kernel with the precision mode switched by the
-QAT phase at runtime via lax.cond — the software image of the configurable
-datapath register.
+Backends:
+  * `backend="jnp"` (default, training) — dense layers via jnp.dot on
+    fake-quantized values; differentiable, fast on CPU.
+  * `backend="pallas"` — the network-resident fused kernel
+    (kernels/fxp_mlp): ONE Pallas call runs the whole actor/critic forward
+    with all weights VMEM-resident, QAT sites fused between layers and the
+    dual-precision datapath flipped by a scalar-prefetch phase flag (no
+    lax.cond double-trace).  Forward/inference only.
+  * `backend="pallas_layer"` — the per-layer dual-precision AAP-core kernel
+    chain (kernels/fxp_matmul), precision switched by the QAT phase at
+    runtime via lax.cond; kept as the reference/fallback for the fused path.
 """
 from __future__ import annotations
 
@@ -24,6 +30,7 @@ import jax.numpy as jnp
 from repro.core import fixedpoint as fxp
 from repro.core.qat import QATContext, QATState, quantize_grads
 from repro.kernels.fxp_matmul.ops import fxp_dense
+from repro.kernels.fxp_mlp.ops import fxp_mlp_forward
 from repro.optim import adam, fxp_adam
 from repro.rl.envs.base import EnvSpec
 
@@ -32,6 +39,8 @@ Params = dict[str, Any]
 
 ACTOR_SITES = ["actor/l0", "actor/l1", "actor/l2"]
 CRITIC_SITES = ["critic/l0", "critic/l1", "critic/l2"]
+ACTOR_ACTS = ("relu", "relu", "tanh")
+CRITIC_ACTS = ("relu", "relu", "none")
 HIDDEN = (400, 300)  # paper §VI-B
 
 
@@ -46,7 +55,7 @@ class DDPGConfig:
     qat_bits: int = 16
     qat_enabled: bool = True
     fxp_weights: bool = True    # project weights/grads to Q15.16
-    backend: str = "jnp"        # "jnp" | "pallas"
+    backend: str = "jnp"        # "jnp" | "pallas" (fused) | "pallas_layer"
     exploration_sigma: float = 0.1
 
 
@@ -80,7 +89,7 @@ def _init_mlp(key, sizes: list[int]) -> Params:
 
 
 def _dense(x, layer, activation: str, *, backend: str, quant_phase) -> Array:
-    if backend == "pallas":
+    if backend == "pallas_layer":
         full = partial(fxp_dense, full_precision=True, activation=activation)
         half = partial(fxp_dense, full_precision=False, activation=activation)
         return jax.lax.cond(quant_phase,
@@ -94,25 +103,59 @@ def _dense(x, layer, activation: str, *, backend: str, quant_phase) -> Array:
     return y
 
 
-def actor_forward(params: Params, obs: Array, ctx: Optional[QATContext],
-                  *, backend: str = "jnp") -> Array:
-    qp = ctx.state.quantized_phase if ctx is not None else jnp.array(False)
-    x = obs
-    for i, act in ((0, "relu"), (1, "relu"), (2, "tanh")):
+def _fused_mlp(params: Params, x: Array, ctx: Optional[QATContext],
+               *, sites: list[str], activations: tuple[str, ...]) -> Array:
+    """Whole-network forward through the fused kernel (kernels/fxp_mlp):
+    one Pallas call, weights VMEM-resident, QAT sites fused in-pipeline.
+    Range observations flow back into `ctx` via `observe`, so QAT state
+    evolves identically to the per-layer path."""
+    n = len(activations)
+    ws = tuple(params[f"l{i}"]["w"] for i in range(n))
+    bs = tuple(params[f"l{i}"]["b"] for i in range(n))
+    if ctx is None or not ctx.state.config.enabled:
+        y, _, _ = fxp_mlp_forward(x, ws, bs, activations=activations,
+                                  quant_phase=jnp.array(False), qat=False)
+        return y
+    cfg = ctx.state.config
+    deltas, zs = ctx.site_quant_params(sites)
+    y, mns, mxs = fxp_mlp_forward(
+        x, ws, bs, deltas, zs, activations=activations,
+        quant_phase=ctx.state.quantized_phase, n_bits=cfg.n_bits,
+        fxp32_phase1=cfg.fxp32_phase1)
+    for j, site in enumerate(sites):
+        ctx.observe(site, mns[j], mxs[j])
+    return y
+
+
+def _mlp_forward(params: Params, x: Array, ctx: Optional[QATContext],
+                 *, sites: list[str], activations: tuple[str, ...],
+                 backend: str) -> Array:
+    if backend == "pallas":
+        return _fused_mlp(params, x, ctx, sites=sites, activations=activations)
+    # half-precision dense is tied to activation quantization: with QAT off
+    # there is no quantized phase, so the datapath stays full precision
+    # (keeps this path bit-comparable with the fused kernel's qat=False mode)
+    qp = (ctx.state.quantized_phase
+          if ctx is not None and ctx.state.config.enabled
+          else jnp.array(False))
+    for i, act in enumerate(activations):
         if ctx is not None:
-            x = ctx.site(f"actor/l{i}", x)
+            x = ctx.site(sites[i], x)
         x = _dense(x, params[f"l{i}"], act, backend=backend, quant_phase=qp)
     return x
 
 
+def actor_forward(params: Params, obs: Array, ctx: Optional[QATContext],
+                  *, backend: str = "jnp") -> Array:
+    return _mlp_forward(params, obs, ctx, sites=ACTOR_SITES,
+                        activations=ACTOR_ACTS, backend=backend)
+
+
 def critic_forward(params: Params, obs: Array, action: Array,
                    ctx: Optional[QATContext], *, backend: str = "jnp") -> Array:
-    qp = ctx.state.quantized_phase if ctx is not None else jnp.array(False)
     x = jnp.concatenate([obs, action], axis=-1)
-    for i, act in ((0, "relu"), (1, "relu"), (2, "none")):
-        if ctx is not None:
-            x = ctx.site(f"critic/l{i}", x)
-        x = _dense(x, params[f"l{i}"], act, backend=backend, quant_phase=qp)
+    x = _mlp_forward(params, x, ctx, sites=CRITIC_SITES,
+                     activations=CRITIC_ACTS, backend=backend)
     return jnp.squeeze(x, -1)
 
 
@@ -147,6 +190,10 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
            ) -> tuple[DDPGState, dict[str, Array]]:
     """One FIXAR timestep's training work: critic BP/WU then actor BP/WU
     (operation sequence of Fig. 3), QAT-aware, fixed-point weights."""
+    if cfg.backend != "jnp":
+        raise ValueError(
+            f"backend={cfg.backend!r} is forward/inference-only (pallas_call "
+            "has no autodiff rule); train with backend='jnp'")
     obs, action = batch["obs"], batch["action"]
     reward, next_obs = batch["reward"], batch["next_obs"]
     done = batch["done"].astype(jnp.float32)

@@ -1,0 +1,151 @@
+"""Tiny deterministic fallback for `hypothesis` when it isn't installed.
+
+The seed property tests (tests/test_fixedpoint.py, tests/test_envs.py,
+tests/kernels/test_quantize.py) hard-imported hypothesis, which broke tier-1
+collection on images without it.  This module provides just enough of the
+hypothesis API surface those tests use — `given`, `settings`,
+`strategies.floats/integers`, `extra.numpy.arrays/array_shapes` — backed by a
+seeded `numpy.random.Generator`, so the same property bodies still run as
+deterministic multi-example sweeps.
+
+Differences from real hypothesis (deliberate, to stay tiny):
+  * no shrinking, no example database — failures report the drawn values via
+    the assertion itself;
+  * `max_examples` is capped at `_MAX_EXAMPLES` to keep tier-1 fast;
+  * draws are seeded from the test name, so runs are reproducible.
+
+Usage in a test module:
+
+    try:
+        import hypothesis
+        import hypothesis.strategies as st
+        import hypothesis.extra.numpy as hnp
+    except ImportError:        # pragma: no cover - exercised on bare images
+        from _hyp import hypothesis, st, hnp
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import types
+import zlib
+
+import numpy as np
+
+_MAX_EXAMPLES = 10
+
+
+class Strategy:
+    """Base: a strategy draws one value from a numpy Generator."""
+
+    def draw(self, rng: np.random.Generator):
+        raise NotImplementedError
+
+
+class _Integers(Strategy):
+    def __init__(self, min_value, max_value):
+        self.min_value, self.max_value = int(min_value), int(max_value)
+
+    def draw(self, rng):
+        return int(rng.integers(self.min_value, self.max_value,
+                                endpoint=True))
+
+
+class _Floats(Strategy):
+    def __init__(self, min_value=-1e6, max_value=1e6, allow_nan=False,
+                 width=64, **_ignored):
+        self.min_value, self.max_value = float(min_value), float(max_value)
+        self.width = width
+
+    def _cast(self, x):
+        if self.width == 32:
+            x = np.float32(x)
+        return float(np.clip(x, self.min_value, self.max_value))
+
+    def draw(self, rng):
+        # Bias towards the edges + zero: 30% of draws hit a boundary value.
+        r = rng.uniform()
+        if r < 0.1:
+            return self._cast(self.min_value)
+        if r < 0.2:
+            return self._cast(self.max_value)
+        if r < 0.3 and self.min_value <= 0.0 <= self.max_value:
+            return 0.0
+        return self._cast(rng.uniform(self.min_value, self.max_value))
+
+    def fill(self, rng, shape, dtype):
+        vals = rng.uniform(self.min_value, self.max_value, size=shape)
+        vals = vals.astype(dtype)
+        return np.clip(vals, dtype.type(self.min_value),
+                       dtype.type(self.max_value))
+
+
+class _ArrayShapes(Strategy):
+    def __init__(self, min_dims=1, max_dims=3, min_side=1, max_side=10):
+        self.min_dims, self.max_dims = min_dims, max_dims
+        self.min_side, self.max_side = min_side, max_side
+
+    def draw(self, rng):
+        nd = int(rng.integers(self.min_dims, self.max_dims, endpoint=True))
+        return tuple(int(rng.integers(self.min_side, self.max_side,
+                                      endpoint=True)) for _ in range(nd))
+
+
+class _Arrays(Strategy):
+    def __init__(self, dtype, shape, elements=None):
+        self.dtype = np.dtype(dtype)
+        self.shape = shape
+        self.elements = elements if elements is not None else _Floats(-1, 1)
+
+    def draw(self, rng):
+        shape = self.shape
+        if isinstance(shape, Strategy):
+            shape = shape.draw(rng)
+        if isinstance(shape, (int, np.integer)):
+            shape = (int(shape),)
+        if hasattr(self.elements, "fill"):
+            return self.elements.fill(rng, shape, self.dtype)
+        flat = [self.elements.draw(rng) for _ in range(int(np.prod(shape)))]
+        return np.asarray(flat, self.dtype).reshape(shape)
+
+
+def _settings(max_examples=_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._hyp_settings = {"max_examples": max_examples}
+        return fn
+    return deco
+
+
+def _given(*strategies):
+    def deco(fn):
+        params = list(inspect.signature(fn).parameters)
+        drawn_names = params[-len(strategies):]
+        kept = params[:-len(strategies)]
+
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = {**getattr(fn, "_hyp_settings", {}),
+                   **getattr(wrapper, "_hyp_settings", {})}
+            n = min(int(cfg.get("max_examples", _MAX_EXAMPLES)),
+                    _MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode())
+            for example in range(n):
+                rng = np.random.default_rng((seed, example))
+                kw = dict(kwargs)
+                kw.update({name: strat.draw(rng)
+                           for name, strat in zip(drawn_names, strategies)})
+                fn(*args, **kw)
+
+        # pytest resolves fixtures from the visible signature; hide the
+        # drawn parameters so only real fixtures/params remain.
+        sig = inspect.signature(fn)
+        wrapper.__signature__ = sig.replace(
+            parameters=[sig.parameters[p] for p in kept])
+        del wrapper.__wrapped__  # would re-expose the full signature
+        return wrapper
+    return deco
+
+
+hypothesis = types.SimpleNamespace(given=_given, settings=_settings)
+st = types.SimpleNamespace(integers=_Integers, floats=_Floats)
+hnp = types.SimpleNamespace(arrays=_Arrays, array_shapes=_ArrayShapes)

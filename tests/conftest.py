@@ -1,4 +1,9 @@
 import pathlib
 import sys
 
-sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
+_TESTS = pathlib.Path(__file__).resolve().parent
+sys.path.insert(0, str(_TESTS.parent / "src"))
+# Make the local hypothesis fallback (tests/_hyp.py) importable from every
+# test module regardless of pytest's per-directory rootdir insertion.
+if str(_TESTS) not in sys.path:
+    sys.path.insert(0, str(_TESTS))

@@ -1,7 +1,10 @@
 """Fused monitor+quantize kernel vs oracle."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # fall back to the local deterministic shim
+    from _hyp import hypothesis, hnp, st
 import jax
 import jax.numpy as jnp
 import numpy as np

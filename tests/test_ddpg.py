@@ -92,6 +92,43 @@ def test_pallas_backend_matches_jnp():
                                rtol=1e-4, atol=1e-4)
 
 
+def test_fused_backend_matches_perlayer_backend():
+    """Network-resident fused kernel (backend="pallas") == per-layer
+    AAP-core chain (backend="pallas_layer"): same actions, same QAT range
+    evolution."""
+    from repro.core.qat import QATContext, QATState
+
+    env = make("halfcheetah")
+    st = ddpg.init(jax.random.key(0), env.spec, ddpg.DDPGConfig())
+    obs = jax.random.normal(jax.random.key(1), (8, env.spec.obs_dim)) * 2
+    a_fused = ddpg.act(st, obs, cfg=ddpg.DDPGConfig(backend="pallas"))
+    a_layer = ddpg.act(st, obs, cfg=ddpg.DDPGConfig(backend="pallas_layer"))
+    np.testing.assert_allclose(np.asarray(a_fused), np.asarray(a_layer),
+                               rtol=1e-5, atol=1e-5)
+
+    # with QAT off neither backend may flip to the half-precision datapath
+    cfg_off = ddpg.DDPGConfig(qat_enabled=False)
+    st_off = ddpg.init(jax.random.key(0), env.spec, cfg_off)
+    a_f = ddpg.act(st_off, obs, cfg=dataclasses.replace(cfg_off, backend="pallas"))
+    a_l = ddpg.act(st_off, obs,
+                   cfg=dataclasses.replace(cfg_off, backend="pallas_layer"))
+    np.testing.assert_allclose(np.asarray(a_f), np.asarray(a_l),
+                               rtol=1e-6, atol=1e-6)
+
+    qat = QATState.init(delay=100, sites=ddpg.ACTOR_SITES + ddpg.CRITIC_SITES)
+    finals = {}
+    for backend in ("pallas", "pallas_layer"):
+        ctx = QATContext(qat)
+        ddpg.actor_forward(st.actor, obs, ctx, backend=backend)
+        finals[backend] = ctx.finalize().ranges
+    for site in ddpg.ACTOR_SITES:
+        for attr in ("a_min", "a_max", "count"):
+            np.testing.assert_allclose(
+                np.asarray(getattr(finals["pallas"][site], attr)),
+                np.asarray(getattr(finals["pallas_layer"][site], attr)),
+                rtol=1e-6, err_msg=f"{site}.{attr}")
+
+
 @pytest.mark.slow
 def test_learns_pendulum():
     """Reward improves substantially within 12k fused steps (pure float —

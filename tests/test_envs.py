@@ -1,6 +1,9 @@
 """Environment invariants (pure-JAX MuJoCo stand-ins)."""
-import hypothesis
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:  # fall back to the local deterministic shim
+    from _hyp import hypothesis, st
 import jax
 import jax.numpy as jnp
 import numpy as np

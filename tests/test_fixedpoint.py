@@ -1,7 +1,10 @@
 """Property tests for the fixed-point core (hypothesis)."""
-import hypothesis
-import hypothesis.extra.numpy as hnp
-import hypothesis.strategies as st
+try:
+    import hypothesis
+    import hypothesis.extra.numpy as hnp
+    import hypothesis.strategies as st
+except ImportError:  # fall back to the local deterministic shim
+    from _hyp import hypothesis, hnp, st
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -81,7 +84,7 @@ def test_fxp_matmul_raw_exact_vs_int64():
     shift = fxp.FXP32.frac_bits
     oracle = np.clip((acc + (1 << (shift - 1))) >> shift,
                      fxp.FXP32.raw_min, fxp.FXP32.raw_max).astype(np.int32)
-    with jax.enable_x64(True):
+    with jax.experimental.enable_x64(True):
         got = np.asarray(fxp.fxp_matmul_raw(
             jnp.asarray(ar, jnp.int32), jnp.asarray(wr, jnp.int32),
             fxp.FXP32, fxp.FXP32, fxp.FXP32))

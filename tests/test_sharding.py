@@ -16,8 +16,8 @@ def test_adaptive_parallelism_rules_differ_by_phase():
     training emphasizes intra-batch (data-axis) splits."""
     import jax
     from repro.core.parallelism import serve_rules, train_rules
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
     tr = train_rules(mesh)
     sv_long = serve_rules(mesh, shard_kv_seq=True)
     assert tr.rules["batch"] == "data"          # intra-batch for training
@@ -30,8 +30,8 @@ def test_adaptive_parallelism_rules_differ_by_phase():
 def test_divisibility_guard_drops_axis():
     import jax
     from repro.core.parallelism import train_rules
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_auto_mesh
+    mesh = make_auto_mesh((1, 1), ("data", "model"))
 
     class FakeMesh:
         shape = {"data": 16, "model": 16}
@@ -49,8 +49,8 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys; sys.path.insert(0, r"{src}")
 import jax
 from repro.configs import registry
-from repro.launch.dryrun import build_cell
-from repro.launch.mesh import make_debug_mesh
+from repro.launch.dryrun import build_cell, cost_analysis_dict
+from repro.launch.mesh import make_debug_mesh, mesh_context
 from repro.models.config import ShapeConfig
 
 arch, kind = sys.argv[1], sys.argv[2]
@@ -59,10 +59,10 @@ shape = {{"train": ShapeConfig("t", "train", 256, 8),
           "prefill": ShapeConfig("p", "prefill", 512, 4),
           "decode": ShapeConfig("d", "decode", 512, 8)}}[kind]
 mesh = make_debug_mesh(multi_pod=(sys.argv[3] == "multi"))
-with jax.set_mesh(mesh):
+with mesh_context(mesh):
     jitted, args = build_cell(cfg, shape, mesh, qat=True)
     compiled = jitted.lower(*args).compile()
-    print("COMPILED", compiled.cost_analysis().get("flops", 0.0))
+    print("COMPILED", cost_analysis_dict(compiled).get("flops", 0.0))
 """
 
 
