@@ -21,7 +21,7 @@ def main(argv=None) -> None:
                     help="reduced step counts (CI-scale)")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig7,fig8,fig9,fig10,"
-                         "tableii,kernel")
+                         "tableii,kernel,serve")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
 
@@ -29,10 +29,15 @@ def main(argv=None) -> None:
         return only is None or name in only
 
     from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
-                            fig10_accelerator, kernel_bench, tableii_compare)
+                            fig10_accelerator, kernel_bench, serve_bench,
+                            tableii_compare)
 
     if want("kernel"):
         kernel_bench.main([])
+    if want("serve"):
+        # after kernel so the dispatcher calibrates from a fresh
+        # BENCH_fused_mlp.json when both run
+        serve_bench.main(["--quick"] if args.quick else [])
     if want("fig8"):
         fig8_throughput.main(["--steps", "400" if args.quick else "2000"])
     if want("fig9"):

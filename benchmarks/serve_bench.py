@@ -1,0 +1,157 @@
+"""serve/policy benchmark — the end-to-end throughput face of PR 2's kernel.
+
+Measures the batched policy-serving engine the way the paper reports Fig. 8:
+instructions (actions) per second, plus the serving-side numbers the paper's
+FPGA never had to expose — request p50/p99 latency, batch occupancy, and the
+adaptive dispatcher's mode choices per batch size.
+
+Writes `BENCH_serve_policy.json` at the repo root (tracked across PRs, like
+BENCH_fused_mlp.json) and emits the harness CSV lines.
+"""
+import json
+import pathlib
+import sys
+import threading
+
+_REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(_REPO) not in sys.path:
+    sys.path.insert(0, str(_REPO))
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks.common import emit
+
+SERVE_JSON = _REPO / "BENCH_serve_policy.json"
+FUSED_JSON = _REPO / "BENCH_fused_mlp.json"
+DISPATCH_BATCHES = [1, 7, 128, 512]
+
+
+def bench_serve_policy(quick: bool = False) -> dict:
+    import jax
+    from repro.rl import ddpg
+    from repro.rl.envs.locomotion import make
+    from repro.serve.policy import BatcherConfig, CostModel, PolicyEngine
+    from repro.serve.policy.dispatch import MODES
+
+    env = make("halfcheetah")
+    cfg = ddpg.DDPGConfig(qat_delay=0)  # frozen-quantized serving
+    state = ddpg.init(jax.random.key(0), env.spec, cfg)
+    dims = [env.spec.obs_dim, *ddpg.HIDDEN, env.spec.act_dim]
+
+    big = 512
+    lat_iters = 10 if quick else 30
+    ips_iters = 2 if quick else 5
+    rng = np.random.default_rng(0)
+    obs_big = rng.standard_normal((big, dims[0])).astype(np.float32)
+
+    report = {
+        "schema": "fixar/serve_policy_bench/v1",
+        "config": {"net": dims, "big_batch": big, "quick": quick,
+                   "backend": jax.default_backend(),
+                   "qat": "frozen_quantized"},
+        "modes": {},
+        "dispatch": {},
+        "adaptive": {},
+    }
+
+    # ---- per-mode IPS + latency (forced dispatch) -------------------------
+    for mode in MODES:
+        eng = PolicyEngine.from_ddpg(
+            state, force_mode=mode,
+            batcher=BatcherConfig(buckets=(1, 8, 32, 128, big)))
+        eng.warmup(buckets=(1, big))
+        eng.reset_stats()
+        lat_us = []
+        for _ in range(lat_iters):
+            t0 = time.perf_counter()
+            eng.run_batch(obs_big[:1])
+            lat_us.append((time.perf_counter() - t0) * 1e6)
+        big_us = []
+        for _ in range(ips_iters):
+            t0 = time.perf_counter()
+            eng.run_batch(obs_big)
+            big_us.append((time.perf_counter() - t0) * 1e6)
+        ips = big / (float(np.median(big_us)) * 1e-6)
+        res = {
+            "ips_b512": float(ips),
+            "p50_ms": float(np.percentile(lat_us, 50) * 1e-3),
+            "p99_ms": float(np.percentile(lat_us, 99) * 1e-3),
+            "batches": eng.stats()["batches"],
+        }
+        report["modes"][mode] = res
+        emit(f"serve/policy/{mode}/ips_b{big}", 0.0, f"ips={ips:.0f}")
+        emit(f"serve/policy/{mode}/latency_b1",
+             float(np.percentile(lat_us, 50)),
+             f"p99_us={np.percentile(lat_us, 99):.0f}")
+
+    # ---- dispatcher choices: default model vs bench-calibrated ------------
+    cm_default = CostModel.default()
+    cm_cal = CostModel.from_bench(FUSED_JSON)
+    report["dispatch"] = {
+        "default": {str(b): cm_default.choose(b, dims)
+                    for b in DISPATCH_BATCHES},
+        "calibrated": {str(b): cm_cal.choose(b, dims)
+                       for b in DISPATCH_BATCHES},
+        "calibration_source": cm_cal.source,
+    }
+    d = report["dispatch"]["default"]
+    emit("serve/policy/dispatch", 0.0,
+         ";".join(f"b{b}={d[str(b)]}" for b in DISPATCH_BATCHES))
+    assert d["1"] != d["512"], \
+        "adaptive dispatcher must pick different modes for batch 1 vs 512"
+
+    # ---- adaptive end-to-end: concurrent clients through the queue --------
+    eng = PolicyEngine.from_ddpg(
+        state, batcher=BatcherConfig(buckets=(1, 8, 32, 128, big),
+                                     max_wait_ms=2.0))
+    eng.warmup(buckets=(8, 32), modes=("layer",))
+    eng.warmup(buckets=(128, big), modes=("fused",))
+    eng.reset_stats()
+    n_clients, per_client = (4, 8) if quick else (8, 32)
+    eng.start()
+
+    def client(k):
+        futs = [eng.submit(obs_big[(k + i) % big])
+                for i in range(per_client)]
+        for f in futs:
+            f.result(timeout=120.0)
+
+    threads = [threading.Thread(target=client, args=(k,))
+               for k in range(n_clients)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    eng.stop()
+    st = eng.stats()
+    report["adaptive"] = {
+        "requests": st["requests"],
+        "ips_wall": st["ips_wall"],
+        "p50_ms": st["p50_ms"],
+        "p99_ms": st["p99_ms"],
+        "batch_occupancy": st["batch_occupancy"],
+        "mode_histogram": st["mode_histogram"],
+    }
+    emit("serve/policy/adaptive", 0.0,
+         f"requests={st['requests']};ips_wall={st['ips_wall']:.0f};"
+         f"p50_ms={st['p50_ms']:.2f};p99_ms={st['p99_ms']:.2f};"
+         f"occupancy={st['batch_occupancy']:.2f}")
+
+    SERVE_JSON.write_text(json.dumps(report, indent=2) + "\n")
+    emit("serve/policy/json", 0.0, f"wrote={SERVE_JSON.name}")
+    return report
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced iteration counts (CI-scale)")
+    args = ap.parse_args(argv)
+    bench_serve_policy(quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -165,6 +165,68 @@ class QATContext:
         return dataclasses.replace(self.state, ranges=self._new_ranges)
 
 
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class FrozenQuant:
+    """Inference-time snapshot of per-site quantization parameters.
+
+    The serving engine (serve/policy) must never touch the live range
+    monitors — FIXAR's deployment story (QuaRL/QForce-RL framing) is a
+    *frozen* quantized network.  `freeze_quant` snapshots the finalized
+    ranges of a trained `QATState` into this plain pytree: the serve path
+    carries no `QATState`, so no range-monitor write can happen by
+    construction.  The phase flag is captured as a *static* bool, so frozen
+    inference compiles the single datapath it needs (no lax.cond, no
+    phase operand).
+    """
+
+    a_mins: Array   # (L,) finalized per-site range minima
+    a_maxs: Array   # (L,)
+    deltas: Array   # (L,) affine scale per site (fused-kernel operand)
+    zs: Array       # (L,) affine zero point per site
+    quantized: bool = dataclasses.field(metadata=dict(static=True),
+                                        default=True)
+    n_bits: int = dataclasses.field(metadata=dict(static=True), default=16)
+    fxp32_phase1: bool = dataclasses.field(metadata=dict(static=True),
+                                           default=True)
+
+    def site(self, i: int, x: Array) -> Array:
+        """Apply site `i`'s frozen quantizer — bit-identical to what
+        `QATContext.site` produces in the same phase (sans monitoring)."""
+        if self.quantized:
+            return fxp.fake_quant_affine(x, self.a_mins[i], self.a_maxs[i],
+                                         self.n_bits)
+        return fxp.fake_quant(x, fxp.FXP32) if self.fxp32_phase1 else x
+
+
+def freeze_quant(state: QATState, sites: list[str]) -> Optional[FrozenQuant]:
+    """Snapshot `sites`' quant params for serving; None when QAT is off.
+
+    Host-syncs the step counter once (freeze time, not serve time) so the
+    phase becomes a compile-time constant of the serving executable.
+    """
+    cfg = state.config
+    if not cfg.enabled:
+        return None
+    a_mins, a_maxs, deltas, zs = [], [], [], []
+    for name in sites:
+        if name not in state.ranges:
+            raise KeyError(
+                f"QAT site {name!r} not registered; known: "
+                f"{sorted(state.ranges)[:8]}...")
+        a_min, a_max = finalized(state.ranges[name])
+        d, z = fxp.affine_params(a_min, a_max, cfg.n_bits)
+        a_mins.append(a_min)
+        a_maxs.append(a_max)
+        deltas.append(d)
+        zs.append(z.astype(jnp.float32))
+    return FrozenQuant(
+        a_mins=jnp.stack(a_mins), a_maxs=jnp.stack(a_maxs),
+        deltas=jnp.stack(deltas), zs=jnp.stack(zs),
+        quantized=bool(state.quantized_phase),
+        n_bits=cfg.n_bits, fxp32_phase1=cfg.fxp32_phase1)
+
+
 def quantize_weights(params, enabled: bool = True):
     """Project every weight onto the Q15.16 lattice (STE) — FIXAR keeps
     weights fxp32 for the whole run."""
@@ -180,5 +242,5 @@ def quantize_grads(grads, enabled: bool = True):
     return jax.tree.map(lambda g: fxp.fake_quant(g, fxp.FXP32), grads)
 
 
-__all__ = ["QATConfig", "QATState", "QATContext", "quantize_weights",
-           "quantize_grads"]
+__all__ = ["QATConfig", "QATState", "QATContext", "FrozenQuant",
+           "freeze_quant", "quantize_weights", "quantize_grads"]

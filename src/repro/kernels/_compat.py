@@ -10,4 +10,10 @@ def round_up(x: int, m: int) -> int:
     return (x + m - 1) // m * m
 
 
-__all__ = ["CompilerParams", "round_up"]
+def mlp_flops(dims) -> int:
+    """MAC-pair FLOPs for ONE item through an MLP with layer dims `dims` —
+    the single source for the kernels' dispatcher cost hints."""
+    return 2 * sum(k * n for k, n in zip(dims[:-1], dims[1:]))
+
+
+__all__ = ["CompilerParams", "round_up", "mlp_flops"]

@@ -14,7 +14,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from repro.kernels._compat import round_up as _round_up
+from repro.kernels._compat import mlp_flops, round_up as _round_up
 from repro.kernels.fxp_matmul.kernel import fxp_dense_pallas
 from repro.kernels.fxp_matmul.ref import limb_split
 
@@ -63,3 +63,32 @@ def fxp_dense(x: Array, w: Array, b: Optional[Array] = None, *,
                            activation=activation,
                            bm=bm, bn=bn, bk=bk, interpret=interpret)
     return out[:m, :n].reshape(*orig_shape[:-1], n)
+
+
+def fxp_dense_chain(x: Array, weights: tuple, biases: tuple, *,
+                    activations: tuple, full_precision: bool = True,
+                    site_fn=None,
+                    interpret: Optional[bool] = None) -> Array:
+    """Serving entry point: the per-layer AAP-core kernel chain with a
+    STATIC precision phase — intra-layer parallelism, one launch per layer.
+
+    Unlike the training path (`lax.cond` on the runtime QAT phase, both
+    precision kernels traced), frozen inference knows its phase at build
+    time, so exactly one datapath per layer is traced and launched.
+    `site_fn(i, x)`, when given, applies the frozen quantizer in front of
+    layer `i` (see `core.qat.FrozenQuant.site`).
+    """
+    for i, (w, b, act) in enumerate(zip(weights, biases, activations)):
+        if site_fn is not None:
+            x = site_fn(i, x)
+        x = fxp_dense(x, w, b, full_precision=full_precision,
+                      activation=act, interpret=interpret)
+    return x
+
+
+def chain_cost_hint(dims) -> dict:
+    """Dispatcher hook: launch/FLOP shape of the per-layer chain for an MLP
+    with layer dims `dims` — intra-layer parallelism (each launch spreads
+    one layer's output columns across the array)."""
+    return {"launches": len(dims) - 1, "flops_per_item": mlp_flops(dims),
+            "parallelism": "intra_layer"}

@@ -14,7 +14,7 @@ from typing import Optional, Sequence
 import jax
 import jax.numpy as jnp
 
-from repro.kernels._compat import round_up as _round_up
+from repro.kernels._compat import mlp_flops, round_up as _round_up
 from repro.kernels.fxp_mlp.kernel import fxp_mlp_pallas
 
 Array = jax.Array
@@ -90,3 +90,34 @@ def fxp_mlp_forward(x: Array, weights: tuple, biases: tuple,
 
     y = y[:m, :n_out].reshape(*orig_shape[:-1], n_out)
     return y, jnp.min(mins, axis=0), jnp.max(maxs, axis=0)
+
+
+def fxp_mlp_infer(x: Array, weights: tuple, biases: tuple,
+                  deltas: Optional[Array] = None,
+                  zs: Optional[Array] = None, *,
+                  activations: Sequence[str], quant_phase: Array,
+                  n_bits: int = 16, fxp32_phase1: bool = True,
+                  interpret: Optional[bool] = None) -> Array:
+    """Serving entry point: fused forward, range monitors discarded.
+
+    The inference-phase face of the fused kernel for `serve/policy` — same
+    single Pallas launch, but the per-site (min, max) outputs are dropped at
+    the wrapper so nothing downstream can fold them back into a live
+    `QATState` (frozen-QAT serving).  Pass `deltas/zs=None` for the
+    QAT-free pipeline.
+    """
+    qat = deltas is not None and zs is not None
+    y, _, _ = fxp_mlp_forward(x, weights, biases, deltas, zs,
+                              activations=activations,
+                              quant_phase=quant_phase, n_bits=n_bits,
+                              qat=qat, fxp32_phase1=fxp32_phase1,
+                              interpret=interpret)
+    return jax.lax.stop_gradient(y)
+
+
+def fused_cost_hint(dims: Sequence[int]) -> dict:
+    """Dispatcher hook: launch/FLOP shape of the fused path for an MLP with
+    layer dims `dims` — intra-batch parallelism, the whole network in ONE
+    launch (batch is the only grid axis)."""
+    return {"launches": 1, "flops_per_item": mlp_flops(dims),
+            "parallelism": "intra_batch"}

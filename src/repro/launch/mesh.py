@@ -36,6 +36,18 @@ def make_production_mesh(*, multi_pod: bool = False):
     return make_auto_mesh(shape, axes)
 
 
+def make_serve_mesh(n_data=None):
+    """Policy-serving mesh: one `data` axis over the local devices.
+
+    The DDPG policy net is tiny (fits in a single core's VMEM), so scale-out
+    is pure data parallelism — `serve/policy` shards the micro-batch axis
+    across this mesh and keeps the weights replicated.  Defaults to every
+    visible device; on a 1-CPU test host this degenerates to a 1-device
+    mesh (sharding becomes a no-op, same code path)."""
+    n = n_data if n_data is not None else len(jax.devices())
+    return make_auto_mesh((n,), ("data",))
+
+
 def make_debug_mesh(n_data: int = 2, n_model: int = 4, *, multi_pod: bool = False):
     """Small mesh for subprocess sharding tests (8 host devices)."""
     if multi_pod:

@@ -279,18 +279,44 @@ def _banded_local_sdpa(q, k, v, cfg: ModelConfig) -> Array:
 
 def attn_forward(x: Array, p: Params, cfg: ModelConfig, *, local: bool,
                  positions: Array, rules: Optional[ShardingRules],
-                 qat: LayerQAT, chunk: int = 0, unroll: bool = False) -> Array:
+                 qat: LayerQAT, chunk: int = 0, unroll: bool = False,
+                 cache: Optional[dict[str, Array]] = None
+                 ) -> tuple[Array, Optional[dict[str, Array]]]:
     """Full-sequence attention (train / prefill). x: (B, S, d).
 
     `chunk` bounds the score-matrix working set by scanning query chunks;
     `unroll=True` replaces the scan with a python loop (identical math, no
     while-loop — used by the roofline harness, where cost_analysis must see
-    every chunk)."""
+    every chunk).
+
+    `cache` (prefill): a decode-shaped KV cache ({"k","v"}: (B, T, Hk, hd));
+    the prompt's roped K / raw V are written into the exact slots
+    `attn_decode` would have used (ring layout p % T for local layers,
+    absolute positions for global), so decode can continue at pos = S.
+    Returns (y, written_cache) — cache is None when none was passed."""
     q, k, v = _qkv(x, p, cfg, qat)
     q = rope(q, positions, cfg.rope_theta)
     k = rope(k, positions, cfg.rope_theta)
     q = constrain(q, rules, "batch", "seq", "q_heads", "head_dim")
     k = constrain(k, rules, "batch", "seq", "kv_heads", "head_dim")
+
+    if cache is not None and positions.ndim == 1:
+        s_all = x.shape[1]
+        t = cache["k"].shape[1]
+        keep = min(s_all, t)  # ring keeps only the last window of the prompt
+        slots = positions[-keep:]
+        if local and t <= cfg.window:
+            slots = slots % t
+        elif s_all > t:
+            # absolute-slot cache: positions >= t would be silently dropped
+            # by the out-of-bounds scatter and decode would read zeros
+            raise ValueError(
+                f"prompt length {s_all} exceeds the KV cache length {t}; "
+                "init_cache with max_seq >= prompt + max_new")
+        cache = {"k": cache["k"].at[:, slots].set(
+                     k[:, s_all - keep:].astype(cache["k"].dtype)),
+                 "v": cache["v"].at[:, slots].set(
+                     v[:, s_all - keep:].astype(cache["v"].dtype))}
 
     s = x.shape[1]
     if local and s >= 2 * cfg.window and s % cfg.window == 0 \
@@ -322,7 +348,7 @@ def attn_forward(x: Array, p: Params, cfg: ModelConfig, *, local: bool,
     out = qat.site("attn_o_in", out.reshape(x.shape[0], s, -1))
     out = out.reshape(x.shape[0], s, cfg.n_heads, cfg.hd)
     y = jnp.einsum("bshk,hkd->bsd", out, p["wo"].astype(cfg.compute_dtype))
-    return constrain(y, rules, "batch", "seq", "embed")
+    return constrain(y, rules, "batch", "seq", "embed"), cache
 
 
 def attn_decode(x: Array, p: Params, cfg: ModelConfig, *, local: bool,

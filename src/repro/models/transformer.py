@@ -154,9 +154,11 @@ def block_forward(x: Array, bp: Params, cfg: ModelConfig, bt: str, *,
         state = _block_state_init(cfg, bt, x.shape[0], 0, for_decode=False)
     if bt in (ATTN_GLOBAL, ATTN_LOCAL):
         h = L.apply_norm(x, bp["ln1"], cfg)
-        h = L.attn_forward(h, bp["attn"], cfg, local=(bt == ATTN_LOCAL),
-                           positions=positions, rules=rules, qat=qat,
-                           chunk=attn_chunk, unroll=unroll)
+        h, state = L.attn_forward(h, bp["attn"], cfg,
+                                  local=(bt == ATTN_LOCAL),
+                                  positions=positions, rules=rules, qat=qat,
+                                  chunk=attn_chunk, unroll=unroll,
+                                  cache=state)
         x = x + h
         h = L.apply_norm(x, bp["ln2"], cfg)
         if cfg.is_moe:
@@ -525,10 +527,15 @@ def decode_step(params: Params, tokens: Array, cache: Params, pos: Array,
 
 def prefill(params: Params, batch: dict[str, Array], cfg: ModelConfig, *,
             rules: Optional[ShardingRules] = None, attn_chunk: int = 0,
-            unroll: bool = False) -> Array:
-    """Prompt processing; returns last-position logits.  (The baseline
-    prefill recomputes the KV projections into a cache-shaped output only
-    when decode follows; the dry-run cell lowers the logits path.)"""
-    logits, _ = forward(params, batch, cfg, rules=rules, remat=False,
-                        attn_chunk=attn_chunk, unroll=unroll)
-    return logits[:, -1, :]
+            unroll: bool = False, cache: Optional[Params] = None):
+    """Prompt processing; returns last-position logits.
+
+    Without `cache` this is the logits-only path the dry-run cell lowers.
+    With `cache` (from `init_cache`), the whole prompt is processed in ONE
+    batched pass that also populates the KV caches / recurrent states —
+    returns (last_logits, cache) ready for `decode_step` at pos = S."""
+    logits, extras = forward(params, batch, cfg, rules=rules, remat=False,
+                             states=cache, attn_chunk=attn_chunk,
+                             unroll=unroll)
+    last = logits[:, -1, :]
+    return last if cache is None else (last, extras["states"])

@@ -28,9 +28,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import fixedpoint as fxp
-from repro.core.qat import QATContext, QATState, quantize_grads
-from repro.kernels.fxp_matmul.ops import fxp_dense
-from repro.kernels.fxp_mlp.ops import fxp_mlp_forward
+from repro.core.qat import (FrozenQuant, QATContext, QATState, freeze_quant,
+                            quantize_grads)
+from repro.kernels.fxp_matmul.ops import fxp_dense, fxp_dense_chain
+from repro.kernels.fxp_mlp.ops import fxp_mlp_forward, fxp_mlp_infer
 from repro.optim import adam, fxp_adam
 from repro.rl.envs.base import EnvSpec
 
@@ -179,11 +180,71 @@ def init(key: Array, spec: EnvSpec, cfg: DDPGConfig) -> DDPGState:
 def act(state: DDPGState, obs: Array, *, cfg: DDPGConfig,
         noise_key: Optional[Array] = None) -> Array:
     """Actor inference (+ the PRNG exploration-noise unit of Fig. 2)."""
-    ctx = QATContext(state.qat)  # inference uses current ranges, no updates
+    # no-QAT fast path: don't materialize a context (which re-derives quant
+    # params from the range tree) when every site would be a pass-through
+    ctx = QATContext(state.qat) if state.qat.config.enabled else None
     a = actor_forward(state.actor, obs, ctx, backend=cfg.backend)
     if noise_key is not None:
         a = a + cfg.exploration_sigma * jax.random.normal(noise_key, a.shape)
     return jnp.clip(a, -1.0, 1.0)
+
+
+def freeze_actor_quant(state: DDPGState) -> Optional[FrozenQuant]:
+    """Snapshot the actor's site quant params for serving (None if QAT off)."""
+    return freeze_quant(state.qat, ACTOR_SITES)
+
+
+def act_batch(actor: Params, obs: Array,
+              frozen: Optional[FrozenQuant] = None, *,
+              mode: str = "fused") -> Array:
+    """Pure batched greedy policy — the function `serve/policy` lowers once
+    per (bucket, mode) and then drains micro-batches through.
+
+    Unlike `act`, this takes only the actor params and a `FrozenQuant`
+    snapshot (no `DDPGState`, no `QATContext`), so the serve path cannot
+    touch live QAT range monitors by construction.  `mode` mirrors the AAP
+    core's configurable dataflow:
+
+      * "fused" — ONE network-resident Pallas launch, batch as the grid
+        axis (intra-batch parallelism; the training-phase dataflow);
+      * "layer" — the per-layer dual-precision kernel chain, one launch per
+        layer with its columns spread across the array (intra-layer
+        parallelism; the paper's inference dataflow for tiny batches);
+      * "jnp"   — pure-XLA reference fallback.
+
+    Parity with `act(state, obs, cfg)` (per backend, no noise) is pinned in
+    tests/serve/test_policy_engine.py.
+    """
+    n = len(ACTOR_ACTS)
+    ws = tuple(actor[f"l{i}"]["w"] for i in range(n))
+    bs = tuple(actor[f"l{i}"]["b"] for i in range(n))
+    if mode == "fused":
+        if frozen is None:
+            y = fxp_mlp_infer(obs, ws, bs, activations=ACTOR_ACTS,
+                              quant_phase=jnp.array(False))
+        else:
+            y = fxp_mlp_infer(obs, ws, bs, frozen.deltas, frozen.zs,
+                              activations=ACTOR_ACTS,
+                              quant_phase=jnp.array(frozen.quantized),
+                              n_bits=frozen.n_bits,
+                              fxp32_phase1=frozen.fxp32_phase1)
+    elif mode == "layer":
+        y = fxp_dense_chain(
+            obs, ws, bs, activations=ACTOR_ACTS,
+            full_precision=not (frozen is not None and frozen.quantized),
+            site_fn=frozen.site if frozen is not None else None)
+    elif mode == "jnp":
+        x = obs
+        for i, act_name in enumerate(ACTOR_ACTS):
+            if frozen is not None:
+                x = frozen.site(i, x)
+            x = _dense(x, {"w": ws[i], "b": bs[i]}, act_name,
+                       backend="jnp", quant_phase=None)
+        y = x
+    else:
+        raise ValueError(f"unknown serve mode {mode!r}; expected "
+                         "'fused' | 'layer' | 'jnp'")
+    return jnp.clip(y, -1.0, 1.0)
 
 
 def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig

@@ -35,9 +35,11 @@ def make_serve_step(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
 
 def make_prefill(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
                  attn_chunk: int = 0, unroll: bool = False):
-    def prefill_step(params, batch):
+    """prefill: (params, batch[, cache]) — logits-only without a cache (the
+    dry-run/roofline lowering), (logits, cache) with one (decode follows)."""
+    def prefill_step(params, batch, cache=None):
         return T.prefill(params, batch, cfg, rules=rules,
-                         attn_chunk=attn_chunk, unroll=unroll)
+                         attn_chunk=attn_chunk, unroll=unroll, cache=cache)
     return prefill_step
 
 
@@ -50,22 +52,21 @@ def generate(params: Params, cfg: ModelConfig, prompt: Array, max_new: int,
     cache = T.init_cache(cfg, b, max_seq)
     step = jax.jit(make_serve_step(cfg))
 
-    # feed the prompt token by token (simple path; prefill+cache-write is a
-    # serving optimization tracked in EXPERIMENTS.md §Perf)
-    logits = None
-    for i in range(s):
-        logits, cache = step(params, prompt[:, i:i + 1],
-                             cache, jnp.int32(i))
+    # one batched prefill pass builds the KV caches / recurrent states and
+    # yields the prompt's last-position logits (S serve_step calls before)
+    prefill = jax.jit(make_prefill(cfg))
+    logits, cache = prefill(params, {"tokens": prompt}, cache)
 
     out = [prompt]
     tok = None
     for i in range(max_new):
         if temperature > 0.0 and key is not None:
             key, sub = jax.random.split(key)
-            tok = jax.random.categorical(sub, logits[:, -1] / temperature)
+            tok = jax.random.categorical(sub, logits / temperature)
         else:
-            tok = jnp.argmax(logits[:, -1], -1)
+            tok = jnp.argmax(logits, -1)
         tok = tok[:, None].astype(jnp.int32)
         out.append(tok)
-        logits, cache = step(params, tok, cache, jnp.int32(s + i))
+        step_logits, cache = step(params, tok, cache, jnp.int32(s + i))
+        logits = step_logits[:, -1]
     return jnp.concatenate(out, axis=1)

@@ -1,0 +1,14 @@
+"""Adaptive-parallelism batched policy serving (FIXAR's deployment face).
+
+Public API:
+  PolicyEngine      — queue + micro-batch + adaptive dispatch + metrics
+  CostModel / MODES — the per-batch fused/layer/jnp dispatch cost model
+  BatcherConfig     — padding buckets, flush deadline, batch cap
+"""
+from repro.serve.policy.batcher import (BatcherConfig, MicroBatcher,
+                                        PolicyFuture)
+from repro.serve.policy.dispatch import MODES, CostModel
+from repro.serve.policy.engine import PolicyEngine
+
+__all__ = ["PolicyEngine", "CostModel", "MODES", "BatcherConfig",
+           "MicroBatcher", "PolicyFuture"]

@@ -1,0 +1,162 @@
+"""Request queue + micro-batcher for the policy-serving engine.
+
+Concurrent callers submit single observations; the engine's drain loop pulls
+them out as one micro-batch per device call.  Three knobs bound the
+batching tradeoff (throughput vs tail latency):
+
+  * `buckets` — padded batch sizes.  Every drained batch is padded up to the
+    smallest bucket that holds it, so the engine compiles one executable per
+    (bucket, mode) instead of one per request count.
+  * `max_batch` — hard cap per device call (the largest bucket).
+  * `max_wait_ms` — flush deadline: once the oldest queued request has
+    waited this long, the batch goes out however full it is.  A full
+    `max_batch` flushes immediately.
+
+Thread-safety: `submit` may be called from any number of client threads;
+`next_batch` is intended for a single drain thread (the engine's serve
+loop), though nothing breaks with several.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+
+class PolicyFuture:
+    """Minimal future for one in-flight act request (stdlib-only)."""
+
+    def __init__(self):
+        self._event = threading.Event()
+        self._value: Optional[np.ndarray] = None
+        self._error: Optional[BaseException] = None
+
+    def set_result(self, value: np.ndarray) -> None:
+        self._value = value
+        self._event.set()
+
+    def set_exception(self, err: BaseException) -> None:
+        self._error = err
+        self._event.set()
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> np.ndarray:
+        if not self._event.wait(timeout):
+            raise TimeoutError("policy request timed out")
+        if self._error is not None:
+            raise self._error
+        return self._value
+
+
+@dataclasses.dataclass
+class PendingRequest:
+    obs: np.ndarray            # (obs_dim,)
+    future: PolicyFuture
+    t_submit: float            # perf_counter at enqueue
+
+
+@dataclasses.dataclass(frozen=True)
+class BatcherConfig:
+    buckets: tuple[int, ...] = (1, 8, 32, 128, 512)
+    max_wait_ms: float = 2.0
+
+    def __post_init__(self):
+        object.__setattr__(self, "buckets", tuple(self.buckets))
+        if not self.buckets or tuple(sorted(self.buckets)) != self.buckets:
+            raise ValueError(f"buckets must be sorted+non-empty: {self.buckets}")
+
+    @property
+    def max_batch(self) -> int:
+        return self.buckets[-1]
+
+    def bucket_for(self, n: int) -> int:
+        """Smallest padding bucket holding n requests (n <= max_batch)."""
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(f"batch of {n} exceeds max bucket {self.max_batch}")
+
+
+class MicroBatcher:
+    """FIFO queue with deadline-or-full draining (see module docstring)."""
+
+    def __init__(self, config: BatcherConfig = BatcherConfig()):
+        self.config = config
+        self._queue: deque[PendingRequest] = deque()
+        self._lock = threading.Lock()
+        self._nonempty = threading.Condition(self._lock)
+        self._closed = False
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    def submit(self, obs) -> PolicyFuture:
+        req = PendingRequest(obs=np.asarray(obs, np.float32),
+                             future=PolicyFuture(),
+                             t_submit=time.perf_counter())
+        with self._nonempty:
+            if self._closed:
+                raise RuntimeError("batcher closed; engine stopped")
+            self._queue.append(req)
+            self._nonempty.notify()
+        return req.future
+
+    def close(self) -> None:
+        """Reject all future submits (engine shutdown step 1).  Already-
+        queued requests stay put for the serve loop to finish; the closed
+        check shares the submit lock, so no request can slip past it."""
+        with self._lock:
+            self._closed = True
+
+    def drain(self) -> list[PendingRequest]:
+        """Empty the queue (engine shutdown step 2, after the loop exits:
+        the caller must resolve every returned future, e.g. with an
+        exception)."""
+        with self._lock:
+            out = list(self._queue)
+            self._queue.clear()
+            return out
+
+    def reopen(self) -> None:
+        with self._lock:
+            self._closed = False
+
+    def next_batch(self, timeout: Optional[float] = None
+                   ) -> list[PendingRequest]:
+        """Block until a batch is ready, then drain up to `max_batch`.
+
+        Ready means: the queue holds `max_batch` requests, OR the oldest
+        request has aged past `max_wait_ms`.  Returns [] if `timeout`
+        elapses with an empty queue (lets the engine's serve loop poll its
+        stop flag).
+        """
+        deadline = None if timeout is None else time.perf_counter() + timeout
+        max_wait = self.config.max_wait_ms * 1e-3
+        with self._nonempty:
+            while True:
+                if self._queue:
+                    age = time.perf_counter() - self._queue[0].t_submit
+                    if len(self._queue) >= self.config.max_batch \
+                            or age >= max_wait:
+                        n = min(len(self._queue), self.config.max_batch)
+                        return [self._queue.popleft() for _ in range(n)]
+                    # wake when the oldest request hits the flush deadline
+                    wait = max_wait - age
+                else:
+                    wait = None
+                if deadline is not None:
+                    remaining = deadline - time.perf_counter()
+                    if remaining <= 0:
+                        return []
+                    wait = remaining if wait is None else min(wait, remaining)
+                self._nonempty.wait(wait)
+
+
+__all__ = ["PolicyFuture", "PendingRequest", "BatcherConfig", "MicroBatcher"]

@@ -1,0 +1,148 @@
+"""Adaptive dispatch — the paper's configurable PE array as a cost model.
+
+FIXAR's AAP core runs ONE array under two dataflows and flips per workload
+shape: intra-layer parallelism when a single vector must finish fast
+(inference), intra-batch parallelism when many independent MVMs amortize the
+array (training).  The serving engine faces the same choice per micro-batch,
+plus a pure-XLA reference fallback:
+
+  mode     kernel                       parallelism    launches
+  ------   --------------------------   ------------   -----------------
+  fused    kernels/fxp_mlp (1 launch)   intra-batch    1 (whole network)
+  layer    kernels/fxp_matmul chain     intra-layer    L (one per layer)
+  jnp      plain XLA matmuls            none (ref)     1 fused XLA call
+
+The dispatcher scores each mode with a two-term affine cost
+
+    t(mode, B) = launches(mode) * per_launch_us[mode]
+               + B * kflops_per_item * us_per_kflop[mode]
+
+and picks the argmin.  Launch counts and FLOP shapes come from the kernels'
+own cost hints (`fused_cost_hint` / `chain_cost_hint`), so the model tracks
+the kernels if their structure changes.  The default coefficients encode the
+hardware-shaped regime (fused pays a big single-launch setup for the best
+per-item rate; the per-layer chain is the cheapest way to finish one vector);
+`CostModel.from_bench` recalibrates the per-item rates from measured
+`BENCH_fused_mlp.json` acting-path IPS, which is what `benchmarks/serve_bench`
+does on real hardware.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import pathlib
+from typing import Optional, Sequence
+
+from repro.kernels._compat import mlp_flops as flops_per_item
+from repro.kernels.fxp_matmul.ops import chain_cost_hint
+from repro.kernels.fxp_mlp.ops import fused_cost_hint
+
+MODES = ("fused", "layer", "jnp")
+
+# maps a DDPG backend name (BENCH_fused_mlp.json's actor_ips keys) to a mode
+BACKEND_TO_MODE = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp"}
+
+
+def cost_hint(mode: str, dims: Sequence[int]) -> dict:
+    """The per-mode launch/FLOP shape: the two kernel modes describe
+    themselves (`fused_cost_hint` / `chain_cost_hint`); the jnp fallback is
+    one fused XLA dispatch over the same MLP."""
+    if mode == "fused":
+        return fused_cost_hint(dims)
+    if mode == "layer":
+        return chain_cost_hint(dims)
+    if mode == "jnp":
+        return {"launches": 1, "flops_per_item": flops_per_item(dims),
+                "parallelism": "none"}
+    raise ValueError(f"unknown serve mode {mode!r}; expected one of {MODES}")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModeCost:
+    per_launch_us: float   # fixed cost per kernel launch
+    us_per_kflop: float    # marginal cost per item-kFLOP
+
+
+# Hardware-shaped defaults (see module docstring).  With the paper actor
+# (17-400-300-6, ~257 kFLOP/item) these cross over at B ~ 100:
+#   B=1   -> layer (3 cheap launches beat one big fused setup)
+#   B=512 -> fused (per-item rate dominates, batch rides the grid axis)
+DEFAULT_COSTS = {
+    "fused": ModeCost(per_launch_us=120.0, us_per_kflop=0.0010),
+    "layer": ModeCost(per_launch_us=10.0, us_per_kflop=0.0045),
+    "jnp": ModeCost(per_launch_us=45.0, us_per_kflop=0.0120),
+}
+
+
+@dataclasses.dataclass
+class CostModel:
+    """Per-mode affine latency model + argmin chooser."""
+
+    costs: dict[str, ModeCost]
+    source: str = "default"
+
+    @staticmethod
+    def default() -> "CostModel":
+        return CostModel(dict(DEFAULT_COSTS))
+
+    @staticmethod
+    def launches(mode: str, dims: Sequence[int]) -> int:
+        return cost_hint(mode, dims)["launches"]
+
+    def estimate_us(self, mode: str, batch: int, dims: Sequence[int]) -> float:
+        c = self.costs[mode]
+        hint = cost_hint(mode, dims)
+        kflops = batch * hint["flops_per_item"] / 1e3
+        return c.per_launch_us * hint["launches"] + c.us_per_kflop * kflops
+
+    def choose(self, batch: int, dims: Sequence[int],
+               modes: Sequence[str] = MODES) -> str:
+        return min(modes, key=lambda m: self.estimate_us(m, batch, dims))
+
+    @staticmethod
+    def from_bench(path, fallback_to_default: bool = True) -> "CostModel":
+        """Recalibrate per-item rates from `BENCH_fused_mlp.json`.
+
+        The kernel bench measures acting-path IPS per backend at one batch
+        size B0; we keep the default launch overheads and back out each
+        mode's marginal rate from `B0/IPS = launches*overhead + B0*k*rate`.
+        Missing file / missing modes keep their defaults (the model must
+        stay total — the dispatcher cannot refuse to answer).
+        """
+        path = pathlib.Path(path)
+        costs = dict(DEFAULT_COSTS)
+        if not path.exists():
+            if not fallback_to_default:
+                raise FileNotFoundError(path)
+            return CostModel(costs, source="default (no bench file)")
+        try:
+            data = json.loads(path.read_text())
+            b0 = int(data.get("config", {}).get("batch", 256))
+            net = list(data.get("config", {}).get("net", [17, 400, 300, 6]))
+            for backend, ips in data.get("actor_ips", {}).items():
+                mode = BACKEND_TO_MODE.get(backend)
+                if mode is None:
+                    continue
+                ips = float(ips)
+                if ips <= 0:
+                    continue
+                hint = cost_hint(mode, net)
+                total_us = b0 / ips * 1e6
+                overhead = costs[mode].per_launch_us * hint["launches"]
+                marginal_us = max(total_us - overhead, 0.1 * total_us)
+                costs[mode] = ModeCost(
+                    costs[mode].per_launch_us,
+                    marginal_us / (b0 * hint["flops_per_item"] / 1e3))
+        except (ValueError, TypeError, KeyError, AttributeError,
+                OSError) as err:
+            # truncated/malformed bench file (e.g. kernel_bench killed
+            # mid-write) must not break serving — keep defaults
+            if not fallback_to_default:
+                raise
+            return CostModel(dict(DEFAULT_COSTS),
+                             source=f"default (unreadable bench: {err})")
+        return CostModel(costs, source=str(path))
+
+
+__all__ = ["MODES", "ModeCost", "CostModel", "DEFAULT_COSTS",
+           "cost_hint", "flops_per_item"]

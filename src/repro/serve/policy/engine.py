@@ -1,0 +1,259 @@
+"""Batched fixed-point policy-serving engine (the tentpole of serve/policy).
+
+Request lifecycle::
+
+    client threads ──submit(obs)──▶ MicroBatcher (queue, flush deadline)
+                                        │ drain: ≤ max_batch, pad → bucket
+                                        ▼
+                                  adaptive dispatcher (dispatch.CostModel)
+                                        │ fused / layer / jnp per batch
+                                        ▼
+                                  ONE device call (ddpg.act_batch,
+                                  lowered once per (bucket, mode))
+                                        │ optional mesh batch-sharding
+                                        ▼
+                    futures resolve ◀── scatter rows back to requests
+
+The engine is frozen-QAT by construction: it holds only the actor params
+and a `core.qat.FrozenQuant` snapshot — there is no `QATState` anywhere on
+the serve path, so no range-monitor write can happen (QuaRL/QForce-RL's
+"deploy the quantized policy" framing).  Metrics cover the throughput story
+end to end: IPS, p50/p99 request latency, batch occupancy, and a dispatch-
+mode histogram (the Fig. 8-comparable numbers land in
+`BENCH_serve_policy.json` via benchmarks/serve_bench).
+"""
+from __future__ import annotations
+
+import functools
+import threading
+import time
+from collections import deque
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.rl import ddpg
+from repro.serve.policy.batcher import BatcherConfig, MicroBatcher, PolicyFuture
+from repro.serve.policy.dispatch import MODES, CostModel
+
+Array = jax.Array
+Params = dict[str, Any]
+
+
+class PolicyEngine:
+    """Drains concurrent act requests into batched device calls.
+
+    Synchronous use: `run_batch(obs)` — one padded, dispatched device call.
+    Threaded use: `start()`, then `submit(obs).result()` from any number of
+    client threads; `stop()` to drain and join.
+    """
+
+    def __init__(self, actor: Params,
+                 frozen=None, *,
+                 cost_model: Optional[CostModel] = None,
+                 batcher: BatcherConfig = BatcherConfig(),
+                 modes: Sequence[str] = MODES,
+                 force_mode: Optional[str] = None,
+                 mesh=None):
+        self.actor = actor
+        self.frozen = frozen
+        self.cost_model = cost_model or CostModel.default()
+        self.batcher_config = batcher
+        self.modes = tuple(modes)
+        self.force_mode = force_mode
+        if force_mode is not None and force_mode not in self.modes:
+            raise ValueError(f"force_mode {force_mode!r} not in enabled "
+                             f"modes {self.modes}")
+        self.mesh = mesh
+        self._sharding = (NamedSharding(mesh, P("data"))
+                          if mesh is not None else None)
+        n = len(ddpg.ACTOR_ACTS)
+        self.dims = [int(actor["l0"]["w"].shape[0])] + \
+                    [int(actor[f"l{i}"]["w"].shape[1]) for i in range(n)]
+        self._fns = {mode: jax.jit(functools.partial(ddpg.act_batch,
+                                                     mode=mode))
+                     for mode in self.modes}
+        self._batcher = MicroBatcher(batcher)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # ---- metrics (guarded by _mlock): running totals for the unbounded
+        # aggregates, a bounded window for the latency percentiles — stats()
+        # stays O(window), memory stays flat at millions-of-requests scale
+        self._mlock = threading.Lock()
+        self._lat_window: deque[float] = deque(maxlen=100_000)
+        self._totals = {"requests": 0, "actions": 0, "batches": 0,
+                        "device_s": 0.0, "occupancy_sum": 0.0}
+        self._mode_hist: dict[str, int] = {}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    @classmethod
+    def from_ddpg(cls, state: "ddpg.DDPGState", **kwargs) -> "PolicyEngine":
+        """Snapshot a trained DDPG state into a serving engine (freezes the
+        actor's site quant params; QAT-off states serve unquantized)."""
+        return cls(state.actor, ddpg.freeze_actor_quant(state), **kwargs)
+
+    # ------------------------------------------------------------------ #
+    # dispatch + device call
+    # ------------------------------------------------------------------ #
+
+    def choose_mode(self, bucket: int) -> str:
+        if self.force_mode is not None:
+            return self.force_mode
+        return self.cost_model.choose(bucket, self.dims, self.modes)
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None,
+               modes: Optional[Sequence[str]] = None) -> int:
+        """Lower + compile the (bucket, mode) executables ahead of traffic.
+        Returns the number of executables warmed."""
+        n = 0
+        dummy = np.zeros((1, self.dims[0]), np.float32)
+        for bucket in buckets or self.batcher_config.buckets:
+            for mode in modes or ([self.force_mode] if self.force_mode
+                                  else self.modes):
+                x = np.broadcast_to(dummy, (bucket, self.dims[0]))
+                self._call(np.ascontiguousarray(x), mode)
+                n += 1
+        return n
+
+    def _call(self, x_padded: np.ndarray, mode: str) -> Array:
+        if mode not in self._fns:
+            raise ValueError(f"mode {mode!r} not in enabled modes "
+                             f"{self.modes}")
+        x = jnp.asarray(x_padded)
+        if self._sharding is not None \
+                and x.shape[0] % self.mesh.size == 0:
+            x = jax.device_put(x, self._sharding)
+        return self._fns[mode](self.actor, x, self.frozen)
+
+    def run_batch(self, obs) -> np.ndarray:
+        """One engine pass over (n, obs_dim) observations: pad to a bucket,
+        dispatch adaptively, call the device once, unpad.  Batches larger
+        than the top bucket are chunked."""
+        obs = np.asarray(obs, np.float32)
+        n = obs.shape[0]
+        cap = self.batcher_config.max_batch
+        if n > cap:
+            return np.concatenate([self.run_batch(obs[i:i + cap])
+                                   for i in range(0, n, cap)])
+        bucket = self.batcher_config.bucket_for(n)
+        mode = self.choose_mode(bucket)
+        x = np.zeros((bucket, self.dims[0]), np.float32)
+        x[:n] = obs
+        t0 = time.perf_counter()
+        y = jax.block_until_ready(self._call(x, mode))
+        device_s = time.perf_counter() - t0
+        with self._mlock:
+            self._totals["actions"] += n
+            self._totals["batches"] += 1
+            self._totals["device_s"] += device_s
+            self._totals["occupancy_sum"] += n / bucket
+            self._mode_hist[mode] = self._mode_hist.get(mode, 0) + 1
+        return np.asarray(y[:n])
+
+    # ------------------------------------------------------------------ #
+    # threaded serving
+    # ------------------------------------------------------------------ #
+
+    def submit(self, obs) -> PolicyFuture:
+        """Enqueue one observation (obs_dim,); resolve via .result().
+        Raises RuntimeError once the engine is stopped (never leaves a
+        future dangling in a queue nothing drains)."""
+        if self._thread is None:
+            raise RuntimeError(
+                "engine not serving; call start() first (or use run_batch "
+                "for synchronous batches)")
+        with self._mlock:
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+        return self._batcher.submit(obs)
+
+    def start(self) -> "PolicyEngine":
+        if self._thread is not None:
+            raise RuntimeError("engine already started")
+        self._stop.clear()
+        self._batcher.reopen()
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="policy-serve", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop accepting requests, serve what's queued, join the loop.
+
+        Close-before-drain: sustained client traffic cannot livelock the
+        shutdown, and any request that raced past the close is failed
+        loudly, never left unresolved."""
+        if self._thread is None:
+            return
+        self._batcher.close()               # no new submits from here on
+        while len(self._batcher):           # let queued work finish
+            time.sleep(0.005)
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        for r in self._batcher.drain():     # safety net; normally empty
+            r.future.set_exception(
+                RuntimeError("policy engine stopped before serving this "
+                             "request"))
+
+    def _serve_loop(self) -> None:
+        while not self._stop.is_set():
+            reqs = self._batcher.next_batch(timeout=0.02)
+            if not reqs:
+                continue
+            try:
+                acts = self.run_batch(np.stack([r.obs for r in reqs]))
+            except BaseException as err:  # noqa: BLE001 — relay to callers
+                for r in reqs:
+                    r.future.set_exception(err)
+                continue
+            t_done = time.perf_counter()
+            for r, a in zip(reqs, acts):
+                r.future.set_result(a)
+            with self._mlock:
+                self._t_last = t_done
+                self._totals["requests"] += len(reqs)
+                self._lat_window.extend(t_done - r.t_submit for r in reqs)
+
+    # ------------------------------------------------------------------ #
+    # metrics
+    # ------------------------------------------------------------------ #
+
+    def stats(self) -> dict:
+        """Serving metrics so far: totals are exact over the engine's
+        lifetime; latency percentiles cover the most recent window."""
+        with self._mlock:
+            lat = np.asarray(self._lat_window, np.float64)
+            t = dict(self._totals)
+            hist = dict(self._mode_hist)
+            wall = (self._t_last - self._t_first
+                    if self._t_first is not None and self._t_last is not None
+                    else None)
+        return {
+            "requests": t["requests"],
+            "actions": t["actions"],
+            "batches": t["batches"],
+            "ips_device": (t["actions"] / t["device_s"]
+                           if t["device_s"] > 0 else None),
+            "ips_wall": (t["requests"] / wall if wall else None),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "batch_occupancy": (t["occupancy_sum"] / t["batches"]
+                                if t["batches"] else None),
+            "mode_histogram": hist,
+            "cost_model": self.cost_model.source,
+        }
+
+    def reset_stats(self) -> None:
+        with self._mlock:
+            self._lat_window.clear()
+            self._totals = {k: type(v)() for k, v in self._totals.items()}
+            self._mode_hist = {}
+            self._t_first = self._t_last = None
+
+
+__all__ = ["PolicyEngine"]

@@ -1,0 +1,86 @@
+"""generate() prefill path ≡ the old token-by-token serve_step path.
+
+The prompt now goes through ONE batched prefill pass that also writes the
+KV caches / recurrent states (transformer.prefill(cache=...)); decode must
+continue bit-identically from pos = S, including the local-attention ring
+cache when the prompt is longer than the window.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import registry
+from repro.models import transformer as T
+from repro.serve.engine import generate, make_prefill, make_serve_step
+
+# one arch per cache/state family: global KV, local ring + global mix,
+# RG-LRU recurrent + local mix, RWKV6 recurrent
+ARCHS = ["qwen2_0_5b", "gemma3_1b", "recurrentgemma_2b", "rwkv6_1_6b"]
+
+
+def _reference_generate(params, cfg, prompt, max_new):
+    """The pre-fix path: feed the prompt token by token through serve_step."""
+    b, s = prompt.shape
+    cache = T.init_cache(cfg, b, s + max_new)
+    step = jax.jit(make_serve_step(cfg))
+    logits = None
+    for i in range(s):
+        logits, cache = step(params, prompt[:, i:i + 1], cache, jnp.int32(i))
+    out = [prompt]
+    for i in range(max_new):
+        tok = jnp.argmax(logits[:, -1], -1)[:, None].astype(jnp.int32)
+        out.append(tok)
+        logits, cache = step(params, tok, cache, jnp.int32(s + i))
+    return jnp.concatenate(out, axis=1)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_generate_matches_tokenwise_reference(arch):
+    cfg = registry.get_smoke(arch)
+    params = T.init_params(jax.random.key(0), cfg)
+    prompt = jax.random.randint(jax.random.key(1), (2, 9), 0, cfg.vocab_size)
+    got = generate(params, cfg, prompt, max_new=5)
+    want = _reference_generate(params, cfg, prompt, max_new=5)
+    assert (got == want).all(), f"{arch}: prefill path diverged from stepwise"
+
+
+def test_generate_prompt_longer_than_window():
+    """Ring-cache wraparound: prompt (40) > window (32) — prefill must land
+    the surviving tail of the prompt in the exact ring slots decode uses."""
+    cfg = registry.get_smoke("gemma3_1b")
+    assert cfg.window < 40
+    params = T.init_params(jax.random.key(2), cfg)
+    prompt = jax.random.randint(jax.random.key(3), (1, 40), 0, cfg.vocab_size)
+    got = generate(params, cfg, prompt, max_new=4)
+    want = _reference_generate(params, cfg, prompt, max_new=4)
+    assert (got == want).all()
+
+
+def test_prefill_rejects_prompt_longer_than_global_cache():
+    """An absolute-slot (global) cache shorter than the prompt must fail
+    loudly — an out-of-bounds scatter would silently drop the K/V writes
+    and decode would attend zeros."""
+    cfg = registry.get_smoke("qwen2_0_5b")
+    params = T.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (1, 12), 0,
+                                cfg.vocab_size)
+    with pytest.raises(ValueError, match="exceeds the KV cache"):
+        make_prefill(cfg)(params, {"tokens": tokens},
+                          T.init_cache(cfg, 1, 8))
+
+
+def test_prefill_without_cache_keeps_dryrun_contract():
+    """make_prefill(params, batch) (no cache) still returns logits only —
+    the shape the dry-run / roofline cells lower."""
+    cfg = registry.get_smoke("qwen2_0_5b")
+    params = T.init_params(jax.random.key(0), cfg)
+    tokens = jax.random.randint(jax.random.key(1), (2, 8), 0, cfg.vocab_size)
+    out = make_prefill(cfg)(params, {"tokens": tokens})
+    assert isinstance(out, jax.Array) and out.shape == (2, cfg.vocab_size)
+
+    logits, cache = make_prefill(cfg)(params, {"tokens": tokens},
+                                      T.init_cache(cfg, 2, 16))
+    assert logits.shape == (2, cfg.vocab_size)
+    # prompt K/V landed in the cache (non-zero where decode will read)
+    leaf = jax.tree.leaves(cache)[0]
+    assert float(jnp.abs(leaf).max()) > 0

@@ -129,6 +129,35 @@ def test_fused_backend_matches_perlayer_backend():
                 rtol=1e-6, err_msg=f"{site}.{attr}")
 
 
+def test_act_qat_off_touches_no_qat_state(monkeypatch):
+    """Pure inference with QAT disabled must not build a QATContext (which
+    copies the range tree and re-derives quant params every call) — the
+    no-QAT fast path is hoisted in `act`."""
+    env = make("swimmer")
+    cfg = ddpg.DDPGConfig(qat_enabled=False)
+    st = ddpg.init(jax.random.key(0), env.spec, cfg)
+    obs = jax.random.normal(jax.random.key(1), (4, env.spec.obs_dim))
+
+    instantiated = []
+
+    class SpyContext(ddpg.QATContext):
+        def __init__(self, state):
+            instantiated.append(state)
+            super().__init__(state)
+
+    monkeypatch.setattr(ddpg, "QATContext", SpyContext)
+    for backend in ("jnp", "pallas", "pallas_layer"):
+        a = ddpg.act(st, obs, cfg=dataclasses.replace(cfg, backend=backend))
+        assert a.shape == (4, env.spec.act_dim)
+    assert instantiated == [], "QAT state touched during no-QAT inference"
+
+    # with QAT enabled the context is still built exactly once per act
+    cfg_on = ddpg.DDPGConfig()
+    st_on = ddpg.init(jax.random.key(0), env.spec, cfg_on)
+    ddpg.act(st_on, obs, cfg=cfg_on)
+    assert len(instantiated) == 1
+
+
 @pytest.mark.slow
 def test_learns_pendulum():
     """Reward improves substantially within 12k fused steps (pure float —

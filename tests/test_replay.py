@@ -28,3 +28,63 @@ def test_ring_wraparound():
     assert int(buf.ptr) == 2
     vals = sorted(np.asarray(buf.obs).ravel().tolist())
     assert vals == [2.0, 3.0, 4.0, 5.0]  # oldest overwritten
+
+
+def test_single_add_crossing_capacity_wraps():
+    """One `add` whose batch straddles the capacity boundary: slots wrap
+    modulo cap, ptr lands past the wrap, size saturates at cap."""
+    cap = 8
+    buf = replay.init(cap, 1, 1)
+    fill = jnp.arange(6, dtype=jnp.float32)[:, None]  # ptr -> 6
+    buf = replay.add(buf, fill, jnp.zeros((6, 1)), jnp.zeros((6,)),
+                     jnp.zeros((6, 1)), jnp.zeros((6,), jnp.bool_))
+    cross = jnp.arange(100.0, 105.0)[:, None]          # slots 6,7,0,1,2
+    buf = replay.add(buf, cross, jnp.ones((5, 1)), jnp.ones((5,)),
+                     cross + 1, jnp.ones((5,), jnp.bool_))
+    assert int(buf.ptr) == (6 + 5) % cap == 3
+    assert int(buf.size) == cap
+    obs = np.asarray(buf.obs).ravel()
+    np.testing.assert_array_equal(obs[[6, 7, 0, 1, 2]],
+                                  [100.0, 101.0, 102.0, 103.0, 104.0])
+    np.testing.assert_array_equal(obs[[3, 4, 5]], [3.0, 4.0, 5.0])
+    # every field wrapped in lockstep with obs
+    np.testing.assert_array_equal(np.asarray(buf.next_obs).ravel()[[6, 0]],
+                                  [101.0, 103.0])
+    assert bool(np.asarray(buf.done)[[6, 7, 0, 1, 2]].all())
+    assert not bool(np.asarray(buf.done)[[3, 4, 5]].any())
+
+
+def test_ptr_size_invariants_over_many_adds():
+    cap = 8
+    buf = replay.init(cap, 1, 1)
+    written = 0
+    for b in (3, 5, 7, 2, 8, 1):
+        batch = jnp.ones((b, 1))
+        buf = replay.add(buf, batch, batch, jnp.ones((b,)), batch,
+                         jnp.zeros((b,), jnp.bool_))
+        written += b
+        assert int(buf.ptr) == written % cap
+        assert int(buf.size) == min(written, cap)
+
+
+def test_sample_never_returns_uninitialized_slots():
+    """Partially-filled buffer: sampling must only draw from [0, size) —
+    uninitialized slots (zeros here) may never surface."""
+    buf = replay.init(64, 1, 1)
+    filled = jnp.full((3, 1), 7.0)
+    buf = replay.add(buf, filled, filled, jnp.full((3,), 7.0), filled,
+                     jnp.ones((3,), jnp.bool_))
+    for seed in range(20):
+        batch = replay.sample(buf, jax.random.key(seed), 32)
+        assert bool((np.asarray(batch["obs"]) == 7.0).all()), \
+            f"seed {seed} sampled an unwritten slot"
+        assert bool(np.asarray(batch["done"]).all())
+
+
+def test_sample_from_empty_buffer_is_safe():
+    """size=0 guard: sampling an empty buffer must not index garbage
+    (clamped to slot 0) — callers gate on warmup, but the op stays total."""
+    buf = replay.init(16, 2, 1)
+    batch = replay.sample(buf, jax.random.key(0), 4)
+    assert batch["obs"].shape == (4, 2)
+    assert bool((np.asarray(batch["obs"]) == 0.0).all())
