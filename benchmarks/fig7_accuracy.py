@@ -22,7 +22,6 @@ import json
 from benchmarks.common import RESULTS, emit
 import time
 
-import jax
 
 from repro.rl import ddpg, loop
 from repro.rl.envs.locomotion import make

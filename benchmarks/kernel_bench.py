@@ -3,13 +3,21 @@ half-precision mode must cost ~half the MAC work of full-precision mode.
 
 Plus the network-resident fused MLP comparison: the whole paper-actor
 forward in ONE Pallas call (kernels/fxp_mlp) vs the 3-call per-layer
-`fxp_dense` chain, both precision phases, with the acting-path IPS for each
-DDPG backend.  Results land in `BENCH_fused_mlp.json` at the repo root so
-the perf trajectory is tracked across PRs.
+`fxp_dense` chain, both precision phases, the acting-path IPS for each DDPG
+backend at TWO batch sizes (so `CostModel.from_bench` can separate launch
+overhead from per-item rate), and the *training*-step comparison — the
+Fig. 8-comparable line: `ddpg.update()` through the fused kernel's custom
+VJP (fwd + bwd Pallas launches) vs the jnp autodiff backend, in updates/sec
+and trained-samples/sec.  Results land in `BENCH_fused_mlp.json` at the
+repo root so the perf trajectory is tracked across PRs.
 
 On CPU (interpret) we measure wall time AND verify the structural 2× via
 `ref_flops`; on a real TPU the same harness times the Mosaic kernels.
+`--smoke` shrinks batches/iterations to CI scale while emitting the same
+JSON shape (validated by `benchmarks/schema.py`).
 """
+import argparse
+import dataclasses
 import json
 import pathlib
 import sys
@@ -27,15 +35,20 @@ from repro.kernels.fxp_matmul.ops import fxp_dense
 from repro.kernels.fxp_matmul.ref import ref_flops
 
 SHAPES = [(256, 400, 300), (512, 1024, 1024), (64, 17, 400)]
+SMOKE_SHAPES = [(16, 33, 40)]
 
 FUSED_JSON = _REPO / "BENCH_fused_mlp.json"
-ACTOR_BATCH = 256
+# smoke runs must NOT clobber the tracked calibration artifact with tiny
+# interpret-mode numbers — they emit the same shape to an untracked path
+SMOKE_FUSED_JSON = _REPO / "results" / "bench" / "smoke" / FUSED_JSON.name
+ACTOR_BATCHES = (64, 256)        # two points -> slope/intercept separation
+SMOKE_ACTOR_BATCHES = (8, 32)
 
 
 def _count_pallas_calls(fn, *args) -> int:
     """Traced pallas_call count, recursing into cond/pjit sub-jaxprs —
     the per-layer path traces BOTH precision kernels per layer (lax.cond),
-    the fused path traces exactly one."""
+    the fused path traces exactly one (plus one backward under grad)."""
     def subs(v):
         vals = v if isinstance(v, (tuple, list)) else [v]
         for item in vals:
@@ -56,7 +69,53 @@ def _count_pallas_calls(fn, *args) -> int:
     return count(jax.make_jaxpr(fn)(*args).jaxpr)
 
 
-def bench_fused_mlp() -> dict:
+def _dummy_batch(spec, n, key=0):
+    k = jax.random.key(key)
+    return {
+        "obs": jax.random.normal(k, (n, spec.obs_dim)),
+        "action": jax.random.uniform(k, (n, spec.act_dim),
+                                     minval=-1, maxval=1),
+        "reward": jax.random.normal(k, (n,)),
+        "next_obs": jax.random.normal(jax.random.fold_in(k, 1),
+                                      (n, spec.obs_dim)),
+        "done": jnp.zeros((n,), jnp.bool_),
+    }
+
+
+def bench_train_step(report: dict, env, cfg, state, smoke: bool) -> None:
+    """Training-step throughput through the fused kernel's custom VJP vs
+    jnp autodiff — FIXAR's headline is *training* IPS (Fig. 8)."""
+    from repro.rl import ddpg
+
+    batch_size = 16 if smoke else 128
+    iters, warmup = (2, 1) if smoke else (5, 2)
+    batch = _dummy_batch(env.spec, batch_size)
+
+    res = {"batch": batch_size, "updates_per_s": {}, "train_ips": {},
+           "pallas_calls_traced": {}}
+    for backend in ("jnp", "pallas"):
+        bcfg = dataclasses.replace(cfg, backend=backend,
+                                   batch_size=batch_size)
+        res["pallas_calls_traced"][backend] = _count_pallas_calls(
+            lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg), state, batch)
+        upd = jax.jit(lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg))
+        us = time_fn(lambda: upd(state, batch), iters=iters, warmup=warmup)
+        ups = 1e6 / us
+        res["updates_per_s"][backend] = ups
+        res["train_ips"][backend] = ups * batch_size
+        emit(f"kernel/fxp_mlp/train_step/{backend}", us,
+             f"updates_per_s={ups:.2f};train_ips={ups * batch_size:.0f};"
+             f"batch={batch_size}")
+    res["speedup_vs_jnp"] = (res["updates_per_s"]["pallas"]
+                             / res["updates_per_s"]["jnp"])
+    emit("kernel/fxp_mlp/train_step/pallas_calls", 0.0,
+         "fused_fwd_bwd={};jnp={}".format(
+             res["pallas_calls_traced"]["pallas"],
+             res["pallas_calls_traced"]["jnp"]))
+    report["train"] = res
+
+
+def bench_fused_mlp(smoke: bool = False) -> dict:
     """Fused whole-network kernel vs the per-layer fxp_dense chain."""
     from repro.rl import ddpg
     from repro.rl.envs.locomotion import make
@@ -66,7 +125,10 @@ def bench_fused_mlp() -> dict:
     dims = [env.spec.obs_dim, *ddpg.HIDDEN, env.spec.act_dim]
     cfg = ddpg.DDPGConfig()
     state = ddpg.init(jax.random.key(0), env.spec, cfg)
-    obs = jax.random.normal(jax.random.key(1), (ACTOR_BATCH, dims[0]))
+    batches = SMOKE_ACTOR_BATCHES if smoke else ACTOR_BATCHES
+    primary = batches[-1]
+    fwd_iters, fwd_warmup = (2, 1) if smoke else (5, 2)
+    obs = jax.random.normal(jax.random.key(1), (primary, dims[0]))
 
     def forward(backend, qat_state):
         @jax.jit
@@ -76,12 +138,13 @@ def bench_fused_mlp() -> dict:
         return f
 
     report = {
-        "schema": "fixar/fused_mlp_bench/v1",
-        "config": {"batch": ACTOR_BATCH, "net": dims,
-                   "backend": jax.default_backend()},
+        "schema": "fixar/fused_mlp_bench/v2",
+        "config": {"batch": primary, "batches": list(batches), "net": dims,
+                   "backend": jax.default_backend(), "smoke": smoke},
         "pallas_calls_traced": {},
         "phases": {},
         "actor_ips": {},
+        "actor_ips_by_batch": {},
     }
 
     # traced-call structure: fused = 1 kernel for the whole network;
@@ -100,7 +163,6 @@ def bench_fused_mlp() -> dict:
          f"perlayer_executed={len(dims) - 1}")
 
     # wall-clock, both phases (full precision pre-delay, half after)
-    import dataclasses
     for phase_name, step in (("full", 0), ("half", 10)):
         qat = dataclasses.replace(state.qat, step=jnp.array(step, jnp.int32),
                                   config=dataclasses.replace(
@@ -109,32 +171,49 @@ def bench_fused_mlp() -> dict:
         for mode, backend in (("fused", "pallas"),
                               ("perlayer", "pallas_layer")):
             f = forward(backend, qat)
-            us = time_fn(lambda f=f: f(state.actor, obs), iters=5, warmup=2)
+            us = time_fn(lambda f=f: f(state.actor, obs),
+                         iters=fwd_iters, warmup=fwd_warmup)
             res[f"{mode}_us"] = us
             emit(f"kernel/fxp_mlp/actor/{phase_name}/{mode}", us,
-                 f"batch={ACTOR_BATCH}")
+                 f"batch={primary}")
         res["speedup"] = res["perlayer_us"] / res["fused_us"]
         report["phases"][phase_name] = res
         emit(f"kernel/fxp_mlp/actor/{phase_name}/speedup", 0.0,
              f"fused_vs_perlayer={res['speedup']:.2f}x")
 
-    # acting-path IPS (the env-interaction side of the training loop)
+    # acting-path IPS (the env-interaction side of the training loop) at
+    # two batch sizes: the pair lets CostModel.from_bench fit BOTH the
+    # launch overhead (intercept) and the per-item rate (slope)
     for backend in ("jnp", "pallas", "pallas_layer"):
         bcfg = dataclasses.replace(cfg, backend=backend)
         act = jax.jit(lambda s, o: ddpg.act(s, o, cfg=bcfg))
-        us = time_fn(lambda: act(state, obs), iters=5, warmup=2)
-        ips = ACTOR_BATCH / (us * 1e-6)
-        report["actor_ips"][backend] = ips
-        emit(f"kernel/fxp_mlp/act_ips/{backend}", us,
-             f"ips={ips:.0f};batch={ACTOR_BATCH}")
+        per_batch = {}
+        for b in batches:
+            ob = obs[:b]
+            us = time_fn(lambda: act(state, ob), iters=fwd_iters,
+                         warmup=fwd_warmup)
+            per_batch[str(b)] = b / (us * 1e-6)
+            emit(f"kernel/fxp_mlp/act_ips/{backend}/b{b}", us,
+                 f"ips={per_batch[str(b)]:.0f};batch={b}")
+        report["actor_ips_by_batch"][backend] = per_batch
+        report["actor_ips"][backend] = per_batch[str(primary)]
 
-    FUSED_JSON.write_text(json.dumps(report, indent=2) + "\n")
-    emit("kernel/fxp_mlp/json", 0.0, f"wrote={FUSED_JSON.name}")
+    bench_train_step(report, env, cfg, state, smoke)
+
+    target = SMOKE_FUSED_JSON if smoke else FUSED_JSON
+    target.parent.mkdir(parents=True, exist_ok=True)
+    target.write_text(json.dumps(report, indent=2) + "\n")
+    emit("kernel/fxp_mlp/json", 0.0,
+         f"wrote={target.relative_to(_REPO)}")
     return report
 
 
 def main(argv=None):
-    for (m, k, n) in SHAPES:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny batches/iteration counts (CI schema gate)")
+    args = ap.parse_args(argv)
+    for (m, k, n) in (SMOKE_SHAPES if args.smoke else SHAPES):
         x = jax.random.normal(jax.random.key(0), (m, k))
         w = jax.random.normal(jax.random.key(1), (k, n)) * 0.1
         res = {}
@@ -149,7 +228,7 @@ def main(argv=None):
         ratio = res["full"][1] / res["half"][1]
         emit(f"kernel/fxp_dense/{m}x{k}x{n}/flop_ratio", 0.0,
              f"full_vs_half={ratio:.1f}x (paper claims 2x)")
-    bench_fused_mlp()
+    bench_fused_mlp(smoke=args.smoke)
 
 
 if __name__ == "__main__":

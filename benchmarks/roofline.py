@@ -189,7 +189,6 @@ def roofline_cell(arch: str, shape: ShapeConfig, *, qat: bool = True) -> dict:
         return rec
     mesh = make_production_mesh()
     n_dev = mesh.devices.size
-    m = len(cfg.block_pattern)
     n_periods = cfg.n_periods
 
     f1, b1, c1, cd1 = _lower_cell(_reduced(cfg, 1), shape, mesh, qat=qat)

@@ -12,17 +12,22 @@ if str(_REPO) not in sys.path:
     sys.path.insert(0, str(_REPO))
 
 import argparse
-import sys
 
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="reduced step counts (CI-scale)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI schema gate: only kernel+serve benches at tiny "
+                         "dims/batches (interpret mode on CPU); emits the "
+                         "same BENCH_*.json shapes for benchmarks/schema.py")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig7,fig8,fig9,fig10,"
                          "tableii,kernel,serve")
     args = ap.parse_args(argv)
+    if args.smoke and (args.only or args.quick):
+        ap.error("--smoke fixes its own bench set/scale; drop --only/--quick")
     only = set(args.only.split(",")) if args.only else None
 
     def want(name):
@@ -31,6 +36,13 @@ def main(argv=None) -> None:
     from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
                             fig10_accelerator, kernel_bench, serve_bench,
                             tableii_compare)
+
+    if args.smoke:
+        # kernel before serve: the dispatcher calibrates from the fresh
+        # BENCH_fused_mlp.json
+        kernel_bench.main(["--smoke"])
+        serve_bench.main(["--smoke"])
+        return
 
     if want("kernel"):
         kernel_bench.main([])

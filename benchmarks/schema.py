@@ -1,0 +1,231 @@
+"""JSON schemas for the tracked benchmark artifacts.
+
+`BENCH_fused_mlp.json` and `BENCH_serve_policy.json` are consumed
+programmatically — `CostModel.from_bench` calibrates the serving dispatcher
+from the kernel bench, and the CI bench job diffs the serving numbers across
+PRs — so format drift must fail the build instead of silently degrading the
+cost model to its defaults.  This module is the single source of truth for
+both shapes:
+
+    python -m benchmarks.schema --check BENCH_fused_mlp.json \
+        BENCH_serve_policy.json
+
+validates files against the schema matching their `schema` tag (exit code 1
+on the first violation).  CI runs exactly that after `benchmarks/run.py
+--smoke`; tests/test_bench_schema.py pins the checked-in artifacts and the
+smoke output against the same schemas.
+
+Validation uses `jsonschema` when available and falls back to a minimal
+structural checker (required keys + type tags) on bare images, so the gate
+itself has no hard dependency beyond the stdlib.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+_NUM = {"type": "number"}
+_STR = {"type": "string"}
+_NUM_MAP = {"type": "object", "additionalProperties": _NUM}
+
+# per-backend {batch_size: ips} map, at least two batch points so
+# CostModel.from_bench can separate slope from intercept
+_IPS_BY_BATCH = {
+    "type": "object",
+    "additionalProperties": {
+        "type": "object",
+        "additionalProperties": _NUM,
+        "minProperties": 2,
+    },
+}
+
+FUSED_MLP_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "type": "object",
+    "required": ["schema", "config", "pallas_calls_traced", "phases",
+                 "actor_ips", "actor_ips_by_batch", "train"],
+    "properties": {
+        "schema": {"const": "fixar/fused_mlp_bench/v2"},
+        "config": {
+            "type": "object",
+            "required": ["batch", "batches", "net", "backend"],
+            "properties": {
+                "batch": {"type": "integer"},
+                "batches": {"type": "array", "items": {"type": "integer"},
+                            "minItems": 2},
+                "net": {"type": "array", "items": {"type": "integer"},
+                        "minItems": 2},
+                "backend": _STR,
+                "smoke": {"type": "boolean"},
+            },
+        },
+        "pallas_calls_traced": {
+            "type": "object",
+            "required": ["fused", "perlayer", "perlayer_executed"],
+            "additionalProperties": {"type": "integer"},
+        },
+        "phases": {
+            "type": "object",
+            "required": ["full", "half"],
+            "additionalProperties": {
+                "type": "object",
+                "required": ["fused_us", "perlayer_us", "speedup"],
+                "additionalProperties": _NUM,
+            },
+        },
+        "actor_ips": _NUM_MAP,
+        "actor_ips_by_batch": _IPS_BY_BATCH,
+        "train": {
+            "type": "object",
+            "required": ["batch", "updates_per_s", "train_ips",
+                         "pallas_calls_traced", "speedup_vs_jnp"],
+            "properties": {
+                "batch": {"type": "integer"},
+                "updates_per_s": _NUM_MAP,
+                "train_ips": _NUM_MAP,
+                "pallas_calls_traced": {
+                    "type": "object",
+                    "additionalProperties": {"type": "integer"},
+                },
+                "speedup_vs_jnp": _NUM,
+            },
+        },
+    },
+}
+
+SERVE_POLICY_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "type": "object",
+    "required": ["schema", "config", "modes", "dispatch", "adaptive"],
+    "properties": {
+        "schema": {"const": "fixar/serve_policy_bench/v2"},
+        "config": {
+            "type": "object",
+            "required": ["net", "big_batch", "backend", "qat"],
+        },
+        "modes": {
+            "type": "object",
+            "required": ["fused", "layer", "jnp"],
+            "additionalProperties": {
+                "type": "object",
+                "required": ["ips_big", "p50_ms", "p99_ms", "batches"],
+            },
+        },
+        "dispatch": {
+            "type": "object",
+            "required": ["default", "calibrated", "calibration_source"],
+            "properties": {
+                "default": {"type": "object",
+                            "additionalProperties": _STR},
+                "calibrated": {"type": "object",
+                               "additionalProperties": _STR},
+                "calibration_source": _STR,
+            },
+        },
+        "adaptive": {
+            "type": "object",
+            "required": ["requests", "ips_wall", "p50_ms", "p99_ms",
+                         "batch_occupancy", "mode_histogram"],
+        },
+    },
+}
+
+SCHEMAS_BY_TAG = {
+    "fixar/fused_mlp_bench/v2": FUSED_MLP_SCHEMA,
+    "fixar/serve_policy_bench/v2": SERVE_POLICY_SCHEMA,
+}
+
+
+class SchemaError(ValueError):
+    """A bench artifact does not match its declared schema."""
+
+
+def _fallback_validate(data, schema, path="$"):
+    """Tiny structural subset of JSON Schema: type / const / required /
+    properties / additionalProperties / items / minItems / minProperties —
+    exactly what the schemas above use."""
+    types = {"object": dict, "array": list, "string": str,
+             "integer": int, "boolean": bool, "number": (int, float)}
+    t = schema.get("type")
+    if t is not None:
+        py = types[t]
+        ok = isinstance(data, py)
+        if t in ("integer", "number") and isinstance(data, bool):
+            ok = False
+        if not ok:
+            raise SchemaError(f"{path}: expected {t}, got "
+                              f"{type(data).__name__}")
+    if "const" in schema and data != schema["const"]:
+        raise SchemaError(f"{path}: expected {schema['const']!r}, "
+                          f"got {data!r}")
+    if isinstance(data, dict):
+        for key in schema.get("required", ()):
+            if key not in data:
+                raise SchemaError(f"{path}: missing required key {key!r}")
+        if len(data) < schema.get("minProperties", 0):
+            raise SchemaError(f"{path}: needs >= "
+                              f"{schema['minProperties']} entries")
+        props = schema.get("properties", {})
+        extra = schema.get("additionalProperties")
+        for key, val in data.items():
+            if key in props:
+                _fallback_validate(val, props[key], f"{path}.{key}")
+            elif isinstance(extra, dict):
+                _fallback_validate(val, extra, f"{path}.{key}")
+    if isinstance(data, list):
+        if len(data) < schema.get("minItems", 0):
+            raise SchemaError(f"{path}: needs >= {schema['minItems']} items")
+        item_schema = schema.get("items")
+        if isinstance(item_schema, dict):
+            for i, val in enumerate(data):
+                _fallback_validate(val, item_schema, f"{path}[{i}]")
+
+
+def validate_report(data: dict, schema: dict | None = None) -> None:
+    """Validate a loaded bench report; raises SchemaError on mismatch."""
+    if schema is None:
+        tag = data.get("schema") if isinstance(data, dict) else None
+        schema = SCHEMAS_BY_TAG.get(tag)
+        if schema is None:
+            raise SchemaError(
+                f"unknown bench schema tag {tag!r}; known: "
+                f"{sorted(SCHEMAS_BY_TAG)}")
+    try:
+        import jsonschema
+    except ImportError:
+        _fallback_validate(data, schema)
+        return
+    try:
+        jsonschema.validate(data, schema)
+    except jsonschema.ValidationError as err:
+        raise SchemaError(str(err)) from err
+
+
+def validate_file(path) -> str:
+    """Validate one artifact; returns its schema tag."""
+    data = json.loads(pathlib.Path(path).read_text())
+    validate_report(data)
+    return data["schema"]
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if argv[:1] == ["--check"]:
+        argv = argv[1:]
+    if not argv:
+        print("usage: python -m benchmarks.schema --check FILE [FILE...]",
+              file=sys.stderr)
+        return 2
+    for path in argv:
+        try:
+            tag = validate_file(path)
+        except (OSError, json.JSONDecodeError, SchemaError) as err:
+            print(f"FAIL {path}: {err}", file=sys.stderr)
+            return 1
+        print(f"ok {path} ({tag})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -8,7 +8,6 @@ import sys
 
 sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1] / "src"))
 
-import jax
 
 from repro.rl import ddpg, loop
 from repro.rl.envs.locomotion import make

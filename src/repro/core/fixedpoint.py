@@ -40,8 +40,6 @@ Two idioms are exposed:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

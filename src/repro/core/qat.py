@@ -38,7 +38,7 @@ explicitly — `qat_site` returns (x, new_stat) via the `collect` helper; see
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

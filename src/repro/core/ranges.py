@@ -12,7 +12,6 @@ donated, so monitoring is free of host sync.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

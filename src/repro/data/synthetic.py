@@ -13,11 +13,10 @@ n-gram structure, so LM losses actually *decrease* during smoke training
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.models.config import ModelConfig, ShapeConfig
 

@@ -42,14 +42,26 @@ Design
   next layer consumes it (the paper's accumulator -> activation-unit
   pipeline).
 
-Files: `kernel.py` (pallas_call + grid spec), `ops.py` (jitted public
-wrapper, padding + range reduction), `ref.py` (pure-jnp per-layer oracle).
-The per-layer `fxp_dense` chain stays available as the reference/fallback
-(`backend="pallas_layer"` in `rl/ddpg.py`); parity is asserted in
-tests/kernels/test_fxp_mlp.py.  The kernel is forward/inference only — the
-training graph (`backend="jnp"`) stays differentiable.
+* **Trainable via custom VJP** (`fxp_mlp_train`): the same forward wrapped
+  in `jax.custom_vjp`.  Under differentiation the fwd launch additionally
+  writes per-layer residuals (the *effective* dense inputs the MACs consumed
+  and the post-activation outputs), and the backward pass is a SECOND
+  network-resident launch (`fxp_mlp_bwd_pallas`): layers unrolled
+  last-to-first, weights + saved activations VMEM-resident, dW/db
+  accumulated across batch blocks into constant-index output blocks
+  (sequential "arbitrary" grid), straight-through estimators at the fused
+  QAT sites.  `rl/ddpg.py` trains through it with `backend="pallas"`.
+
+Files: `kernel.py` (pallas_call + grid spec, fwd + bwd), `ops.py` (jitted
+public wrappers, padding + range reduction + custom VJP), `ref.py`
+(pure-jnp per-layer oracle).  The per-layer `fxp_dense` chain stays
+available as the reference/fallback (`backend="pallas_layer"` in
+`rl/ddpg.py`); forward parity is asserted in tests/kernels/test_fxp_mlp.py,
+gradient parity in tests/kernels/test_fxp_mlp_grad.py.
 """
-from repro.kernels.fxp_mlp.ops import fxp_mlp_forward
+from repro.kernels.fxp_mlp.ops import (fxp_mlp_forward, fxp_mlp_infer,
+                                       fxp_mlp_train)
 from repro.kernels.fxp_mlp.ref import ref_fxp_mlp
 
-__all__ = ["fxp_mlp_forward", "ref_fxp_mlp"]
+__all__ = ["fxp_mlp_forward", "fxp_mlp_infer", "fxp_mlp_train",
+           "ref_fxp_mlp"]

@@ -55,13 +55,19 @@ def _site_project(x, quant, delta, z, *, n_bits: int, fxp32_phase1: bool):
 
 def _mlp_kernel(phase_ref, *refs, n_layers: int, bm: int, m_valid: int,
                 in_dims: Sequence[int], activations: Sequence[str],
-                n_bits: int, qat: bool, fxp32_phase1: bool):
+                n_bits: int, qat: bool, fxp32_phase1: bool,
+                save_residuals: bool = False):
     x_ref = refs[0]
     wb_refs = refs[1:1 + 2 * n_layers]
     deltas_ref = refs[1 + 2 * n_layers]
     zs_ref = refs[2 + 2 * n_layers]
     y_ref, mins_ref, maxs_ref = refs[3 + 2 * n_layers:6 + 2 * n_layers]
-    acc_ref = refs[6 + 2 * n_layers]
+    if save_residuals:
+        # training-mode extra outputs: per-layer effective dense inputs and
+        # the intermediate layer outputs (the backward kernel's residuals)
+        q_refs = refs[6 + 2 * n_layers:6 + 3 * n_layers]
+        h_refs = refs[6 + 3 * n_layers:5 + 4 * n_layers]
+    acc_ref = refs[-1]
 
     i = pl.program_id(0)
     quant = phase_ref[0] > 0
@@ -85,6 +91,10 @@ def _mlp_kernel(phase_ref, *refs, n_layers: int, bm: int, m_valid: int,
 
         # ---- dual-precision dense: hi pass always, lo pass predicated -----
         hi = x.astype(jnp.bfloat16).astype(jnp.float32)
+        if save_residuals:
+            # the input the MACs actually consumed: hi only in half mode,
+            # hi + lo == x in full mode — what dW must contract against
+            q_refs[li][...] = jnp.where(quant, hi, x)
         n_out_p = w_ref.shape[1]
         acc_ref[:, :n_out_p] = jnp.dot(hi, w_ref[...],
                                        preferred_element_type=jnp.float32)
@@ -102,6 +112,8 @@ def _mlp_kernel(phase_ref, *refs, n_layers: int, bm: int, m_valid: int,
             out = jnp.maximum(out, 0.0)
         elif actn == "tanh":
             out = jnp.tanh(out)
+        if save_residuals and li < n_layers - 1:
+            h_refs[li][...] = out
         x = out
 
     y_ref[...] = x
@@ -111,14 +123,17 @@ def fxp_mlp_pallas(phase: Array, x: Array, weights: Sequence[Array],
                    biases: Sequence[Array], deltas: Array, zs: Array, *,
                    activations: Sequence[str], in_dims: Sequence[int],
                    m_valid: int, bm: int, n_bits: int, qat: bool,
-                   fxp32_phase1: bool, interpret: bool
-                   ) -> tuple[Array, Array, Array]:
+                   fxp32_phase1: bool, interpret: bool,
+                   save_residuals: bool = False):
     """Raw pallas_call; shapes must already be padded (see module docstring).
 
     phase: (1,) i32 scalar-prefetch flag.  x: (Mp, K0p) f32.
     weights[i]: (Kp_i, Np_i) f32, biases[i]: (1, Np_i) f32.
     deltas/zs: (L,) f32 per-site affine params (ignored when qat=False).
-    Returns (y (Mp, NLp), mins (n_blocks, L), maxs (n_blocks, L)).
+    Returns (y (Mp, NLp), mins (n_blocks, L), maxs (n_blocks, L)); with
+    save_residuals=True additionally the per-layer effective dense inputs
+    qs[i] (Mp, Kp_i) and intermediate outputs hs[i] (Mp, Np_i), i < L-1 —
+    the VMEM-resident residuals `fxp_mlp_bwd_pallas` consumes.
     """
     n_layers = len(weights)
     mp, k0p = x.shape
@@ -142,29 +157,192 @@ def fxp_mlp_pallas(phase: Array, x: Array, weights: Sequence[Array],
     in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # zs
     args.extend((deltas, zs))
 
+    out_specs = [
+        pl.BlockSpec((bm, nlp), lambda i, ph: (i, 0)),
+        pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
+        pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((mp, nlp), jnp.float32),
+        jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
+        jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
+    ]
+    if save_residuals:
+        for w in weights:                                   # qs
+            out_specs.append(pl.BlockSpec((bm, w.shape[0]),
+                                          lambda i, ph: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((mp, w.shape[0]),
+                                                  jnp.float32))
+        for w in weights[:-1]:                              # hs (mid layers)
+            out_specs.append(pl.BlockSpec((bm, w.shape[1]),
+                                          lambda i, ph: (i, 0)))
+            out_shape.append(jax.ShapeDtypeStruct((mp, w.shape[1]),
+                                                  jnp.float32))
+
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
         grid=(n_blocks,),
         in_specs=in_specs,
-        out_specs=[
-            pl.BlockSpec((bm, nlp), lambda i, ph: (i, 0)),
-            pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
-            pl.BlockSpec((1, n_layers), lambda i, ph: (i, 0)),
-        ],
+        out_specs=out_specs,
         scratch_shapes=[pltpu.VMEM((bm, max_np), jnp.float32)],
     )
     kern = functools.partial(
         _mlp_kernel, n_layers=n_layers, bm=bm, m_valid=m_valid,
         in_dims=tuple(in_dims), activations=tuple(activations),
-        n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1)
+        n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1,
+        save_residuals=save_residuals)
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=[
-            jax.ShapeDtypeStruct((mp, nlp), jnp.float32),
-            jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
-            jax.ShapeDtypeStruct((n_blocks, n_layers), jnp.float32),
-        ],
+        out_shape=out_shape,
         compiler_params=CompilerParams(dimension_semantics=("parallel",)),
         interpret=interpret,
     )(phase, *args)
+
+
+def _mlp_bwd_kernel(phase_ref, *refs, n_layers: int,
+                    activations: Sequence[str], n_bits: int, qat: bool,
+                    fxp32_phase1: bool):
+    """Whole-network backward in one launch: the dx/dW/db chain, layers
+    unrolled last-to-first, weights and saved activations VMEM-resident.
+
+    Gradient semantics mirror what `jax.grad` produces through the oracle
+    forward (`kernels/fxp_mlp/ref.ref_fxp_mlp`): straight-through estimators
+    across the quantize sites (identity inside the clip range, zero outside —
+    the `fake_quant*` clip gradient), STE across the bf16 hi-limb rounding,
+    `h > 0` for ReLU and `1 - h^2` for tanh from the saved post-activation
+    outputs.  dW contracts the cotangent against the *effective* dense input
+    the MACs consumed (hi limb only in the quantized phase), saved by the
+    forward as `qs`.
+    """
+    g_ref = refs[0]
+    x0_ref = refs[1]
+    w_refs = refs[2:2 + n_layers]
+    q_refs = refs[2 + n_layers:2 + 2 * n_layers]
+    h_refs = refs[2 + 2 * n_layers:2 + 3 * n_layers]  # h[L-1] is padded y
+    deltas_ref = refs[2 + 3 * n_layers]
+    zs_ref = refs[3 + 3 * n_layers]
+    dx_ref = refs[4 + 3 * n_layers]
+    dw_refs = refs[5 + 3 * n_layers:5 + 4 * n_layers]
+    db_refs = refs[5 + 4 * n_layers:5 + 5 * n_layers]
+
+    i = pl.program_id(0)
+    quant = phase_ref[0] > 0
+
+    @pl.when(i == 0)
+    def _zero_accumulators():
+        for li in range(n_layers):
+            dw_refs[li][...] = jnp.zeros_like(dw_refs[li])
+            db_refs[li][...] = jnp.zeros_like(db_refs[li])
+
+    g = g_ref[...]
+    for li in reversed(range(n_layers)):
+        # ---- activation backward from the saved post-activation output ----
+        h = h_refs[li][...]
+        actn = activations[li]
+        if actn == "relu":
+            g = jnp.where(h > 0.0, g, 0.0)
+        elif actn == "tanh":
+            g = g * (1.0 - h * h)
+
+        # ---- parameter gradients (accumulated across batch blocks) --------
+        db_refs[li][...] += jnp.sum(g, axis=0, keepdims=True)
+        q = q_refs[li][...]
+        dw_refs[li][...] += jax.lax.dot_general(
+            q, g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        # ---- dense input gradient: g @ W^T --------------------------------
+        g = jax.lax.dot_general(
+            g, w_refs[li][...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+        # ---- quantize-site backward: STE clip mask on the site input ------
+        if qat:
+            x_in = x0_ref[...] if li == 0 else h_refs[li - 1][...]
+            delta = deltas_ref[li]
+            z = zs_ref[li]
+            lo = -z * delta
+            hi = (jnp.float32((1 << n_bits) - 1) - z) * delta
+            pass_q = jnp.logical_and(x_in >= lo, x_in <= hi)
+            if fxp32_phase1:
+                s32 = jnp.float32(2.0 ** FXP32.frac_bits)
+                xs = x_in * s32
+                pass_f = jnp.logical_and(xs >= jnp.float32(FXP32.raw_min),
+                                         xs <= jnp.float32(FXP32.raw_max))
+            else:
+                pass_f = jnp.ones_like(pass_q)
+            g = jnp.where(jnp.where(quant, pass_q, pass_f), g, 0.0)
+    dx_ref[...] = g
+
+
+def fxp_mlp_bwd_pallas(phase: Array, g: Array, x0: Array,
+                       weights: Sequence[Array], qs: Sequence[Array],
+                       hs: Sequence[Array], deltas: Array, zs: Array, *,
+                       activations: Sequence[str], bm: int, n_bits: int,
+                       qat: bool, fxp32_phase1: bool, interpret: bool
+                       ) -> tuple[Array, list, list]:
+    """Raw backward pallas_call over pre-padded shapes.
+
+    phase: (1,) i32 prefetch flag.  g: (Mp, NLp) cotangent of the padded y
+    (zero in padded rows/cols, so padding self-preserves through the whole
+    backward chain).  x0: (Mp, K0p) padded layer-0 site input.
+    qs[i]/hs[i]: the forward's saved residuals (hs[L-1] = padded y).
+    Returns (dx (Mp, K0p), [dW_i (Kp_i, Np_i)], [db_i (1, Np_i)]).
+
+    dW/db are accumulated across batch blocks into constant-index output
+    blocks, so the grid dimension is "arbitrary" (sequential), not parallel.
+    """
+    n_layers = len(weights)
+    mp, k0p = x0.shape
+    assert mp % bm == 0 and g.shape == (mp, weights[-1].shape[1])
+    n_blocks = mp // bm
+
+    in_specs = [
+        pl.BlockSpec((bm, g.shape[1]), lambda i, ph: (i, 0)),
+        pl.BlockSpec((bm, k0p), lambda i, ph: (i, 0)),
+    ]
+    args = [g, x0]
+    for w in weights:
+        in_specs.append(pl.BlockSpec(w.shape, lambda i, ph: (0, 0)))
+        args.append(w)
+    for q in qs:
+        in_specs.append(pl.BlockSpec((bm, q.shape[1]), lambda i, ph: (i, 0)))
+        args.append(q)
+    for h in hs:
+        in_specs.append(pl.BlockSpec((bm, h.shape[1]), lambda i, ph: (i, 0)))
+        args.append(h)
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # deltas
+    in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))  # zs
+    args.extend((deltas, zs))
+
+    out_specs = [pl.BlockSpec((bm, k0p), lambda i, ph: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((mp, k0p), jnp.float32)]
+    for w in weights:   # dW accumulators: constant index map, VMEM-resident
+        out_specs.append(pl.BlockSpec(w.shape, lambda i, ph: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct(w.shape, jnp.float32))
+    for w in weights:   # db accumulators
+        out_specs.append(pl.BlockSpec((1, w.shape[1]), lambda i, ph: (0, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((1, w.shape[1]), jnp.float32))
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+    )
+    kern = functools.partial(
+        _mlp_bwd_kernel, n_layers=n_layers,
+        activations=tuple(activations), n_bits=n_bits, qat=qat,
+        fxp32_phase1=fxp32_phase1)
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(phase, *args)
+    dx = outs[0]
+    dws = list(outs[1:1 + n_layers])
+    dbs = list(outs[1 + n_layers:1 + 2 * n_layers])
+    return dx, dws, dbs

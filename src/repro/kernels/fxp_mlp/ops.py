@@ -1,23 +1,73 @@
-"""Jitted public wrapper for the network-resident fused MLP kernel.
+"""Jitted public wrappers for the network-resident fused MLP kernel.
 
 `fxp_mlp_forward` pads the batch and every feature dimension to TPU tiles,
 dispatches the single fused Pallas kernel, unpads the result, and reduces the
 per-block range-monitor outputs to one (min, max) pair per QAT site — so a
 caller gets the whole actor/critic forward, QAT sites included, from ONE
 kernel launch instead of 2L+ (L dense + L quantize sweeps).
+
+`fxp_mlp_train` is the differentiable face of the same kernel: a
+`jax.custom_vjp` whose primal IS the fused forward (one launch, no residual
+traffic when nothing differentiates through it), whose fwd rule re-runs the
+kernel with `save_residuals=True` (per-layer effective dense inputs + saved
+activations stay network-resident), and whose bwd rule is a SECOND
+network-resident Pallas launch (`fxp_mlp_bwd_pallas`) running the whole
+dW/db/dx chain with straight-through estimators at the fused QAT sites.  So
+one DDPG loss evaluation trains through exactly two launches: fwd + bwd.
 """
 from __future__ import annotations
 
 import functools
-from typing import Optional, Sequence
+from typing import NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels._compat import mlp_flops, round_up as _round_up
-from repro.kernels.fxp_mlp.kernel import fxp_mlp_pallas
+from repro.kernels.fxp_mlp.kernel import fxp_mlp_bwd_pallas, fxp_mlp_pallas
 
 Array = jax.Array
+
+
+def _row_block(m: int) -> int:
+    """Batch row-block policy — the ONE place fwd padding and the bwd
+    launch must agree on (the VJP bwd re-derives bm from the cotangent's
+    row count with this same function)."""
+    return min(128, _round_up(m, 8))
+
+
+def _pad_net(x: Array, weights: Sequence[Array], biases: Sequence[Array]):
+    """Pad the batch to bm rows and every feature dim to 128 lanes.
+
+    Returns (x2 padded (Mp, K0p), padded weights, padded (1, Np) biases,
+    m valid rows, bm row-block).
+    """
+    k0 = x.shape[-1]
+    x2 = x.reshape(-1, k0).astype(jnp.float32)
+    m = x2.shape[0]
+    bm = _row_block(m)
+    mp = _round_up(m, bm)
+    x2 = jnp.pad(x2, ((0, mp - m), (0, _round_up(k0, 128) - k0)))
+    wp, bp = [], []
+    for w, b in zip(weights, biases):
+        k, n = w.shape
+        kp, np_ = _round_up(k, 128), _round_up(n, 128)
+        wp.append(jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n))))
+        bp.append(jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_))
+    return x2, tuple(wp), tuple(bp), m, bm
+
+
+def _norm_quant_params(deltas, zs, n_layers: int, qat: bool):
+    if not qat:
+        return (jnp.ones((n_layers,), jnp.float32),
+                jnp.zeros((n_layers,), jnp.float32))
+    if deltas is None or zs is None:
+        raise ValueError(
+            "qat=True requires both deltas and zs (from "
+            "QATContext.site_quant_params); pass qat=False for the "
+            "site-free pipeline")
+    return (jnp.asarray(deltas, jnp.float32).reshape(n_layers),
+            jnp.asarray(zs, jnp.float32).reshape(n_layers))
 
 
 @functools.partial(jax.jit, static_argnames=("activations", "n_bits", "qat",
@@ -52,44 +102,147 @@ def fxp_mlp_forward(x: Array, weights: tuple, biases: tuple,
         interpret = jax.default_backend() != "tpu"
 
     orig_shape = x.shape
-    k0 = orig_shape[-1]
-    x2 = x.reshape(-1, k0).astype(jnp.float32)
-    m = x2.shape[0]
     n_out = weights[-1].shape[-1]
-
-    # ---- padding: batch to bm rows, every feature dim to 128 lanes --------
-    bm = min(128, _round_up(m, 8))
-    mp = _round_up(m, bm)
     in_dims = tuple(int(w.shape[0]) for w in weights)
-    assert in_dims[0] == k0
-    x2 = jnp.pad(x2, ((0, mp - m), (0, _round_up(k0, 128) - k0)))
-    wp, bp = [], []
-    for w, b in zip(weights, biases):
-        k, n = w.shape
-        kp, np_ = _round_up(k, 128), _round_up(n, 128)
-        wp.append(jnp.pad(w.astype(jnp.float32), ((0, kp - k), (0, np_ - n))))
-        bp.append(jnp.pad(b.astype(jnp.float32), (0, np_ - n)).reshape(1, np_))
-
-    if not qat:
-        deltas = jnp.ones((n_layers,), jnp.float32)
-        zs = jnp.zeros((n_layers,), jnp.float32)
-    elif deltas is None or zs is None:
-        raise ValueError(
-            "qat=True requires both deltas and zs (from "
-            "QATContext.site_quant_params); pass qat=False for the "
-            "site-free pipeline")
-    deltas = jnp.asarray(deltas, jnp.float32).reshape(n_layers)
-    zs = jnp.asarray(zs, jnp.float32).reshape(n_layers)
+    assert in_dims[0] == orig_shape[-1]
+    x2, wp, bp, m, bm = _pad_net(x, weights, biases)
+    deltas, zs = _norm_quant_params(deltas, zs, n_layers, qat)
     phase = jnp.asarray(quant_phase, jnp.int32).reshape(1)
 
     y, mins, maxs = fxp_mlp_pallas(
-        phase, x2, tuple(wp), tuple(bp), deltas, zs,
+        phase, x2, wp, bp, deltas, zs,
         activations=tuple(activations), in_dims=in_dims, m_valid=m, bm=bm,
         n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1,
         interpret=interpret)
 
     y = y[:m, :n_out].reshape(*orig_shape[:-1], n_out)
     return y, jnp.min(mins, axis=0), jnp.max(maxs, axis=0)
+
+
+class _TrainSpec(NamedTuple):
+    """Hashable statics threaded through the custom VJP as a nondiff arg."""
+
+    activations: tuple
+    dims: tuple          # unpadded layer dims (K0, N1, ..., NL)
+    n_bits: int
+    qat: bool
+    fxp32_phase1: bool
+    interpret: bool
+
+
+def _train_fwd_call(spec: _TrainSpec, phase_f, x, weights, biases,
+                    deltas, zs, save_residuals: bool):
+    x2, wp, bp, m, bm = _pad_net(x, weights, biases)
+    phase = (phase_f > 0).astype(jnp.int32).reshape(1)
+    outs = fxp_mlp_pallas(
+        phase, x2, wp, bp, deltas, zs,
+        activations=spec.activations, in_dims=spec.dims[:-1],
+        m_valid=m, bm=bm, n_bits=spec.n_bits, qat=spec.qat,
+        fxp32_phase1=spec.fxp32_phase1, interpret=spec.interpret,
+        save_residuals=save_residuals)
+    yp, mins, maxs = outs[:3]
+    n_out = spec.dims[-1]
+    y = yp[:m, :n_out].reshape(*x.shape[:-1], n_out)
+    site_mins = jnp.min(mins, axis=0)
+    site_maxs = jnp.max(maxs, axis=0)
+    return y, site_mins, site_maxs, yp, x2, wp, outs[3:], m, bm
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _mlp_train_core(spec: _TrainSpec, phase_f, x, weights, biases,
+                    deltas, zs):
+    y, site_mins, site_maxs, *_ = _train_fwd_call(
+        spec, phase_f, x, weights, biases, deltas, zs, save_residuals=False)
+    return y, site_mins, site_maxs
+
+
+def _mlp_train_core_fwd(spec: _TrainSpec, phase_f, x, weights, biases,
+                        deltas, zs):
+    y, site_mins, site_maxs, yp, x2, wp, res_outs, m, bm = _train_fwd_call(
+        spec, phase_f, x, weights, biases, deltas, zs, save_residuals=True)
+    n_layers = len(weights)
+    qs = tuple(res_outs[:n_layers])
+    hs = tuple(res_outs[n_layers:]) + (yp,)   # h[L-1] is the padded output
+    res = (phase_f, x2, wp, qs, hs, deltas, zs)
+    return (y, site_mins, site_maxs), res
+
+
+def _mlp_train_core_bwd(spec: _TrainSpec, res, cts):
+    gy = cts[0]  # mins/maxs are range-monitor outputs: observed stop-grad
+    phase_f, x2, wp, qs, hs, deltas, zs = res
+    dims = spec.dims
+    n_layers = len(wp)
+
+    gy2 = jnp.asarray(gy, jnp.float32).reshape(-1, dims[-1])
+    m = gy2.shape[0]
+    mp, nlp = hs[-1].shape
+    bm = _row_block(m)
+    gyp = jnp.pad(gy2, ((0, mp - m), (0, nlp - dims[-1])))
+    phase = (phase_f > 0).astype(jnp.int32).reshape(1)
+
+    dxp, dwps, dbps = fxp_mlp_bwd_pallas(
+        phase, gyp, x2, wp, qs, hs, deltas, zs,
+        activations=spec.activations, bm=bm, n_bits=spec.n_bits,
+        qat=spec.qat, fxp32_phase1=spec.fxp32_phase1,
+        interpret=spec.interpret)
+
+    dx = dxp[:m, :dims[0]].reshape(*gy.shape[:-1], dims[0])
+    dws = tuple(dwps[i][:dims[i], :dims[i + 1]] for i in range(n_layers))
+    dbs = tuple(dbps[i][0, :dims[i + 1]] for i in range(n_layers))
+    return (jnp.zeros_like(phase_f), dx, dws, dbs,
+            jnp.zeros_like(deltas), jnp.zeros_like(zs))
+
+
+_mlp_train_core.defvjp(_mlp_train_core_fwd, _mlp_train_core_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("activations", "n_bits", "qat",
+                                             "fxp32_phase1", "interpret"))
+def fxp_mlp_train(x: Array, weights: tuple, biases: tuple,
+                  deltas: Optional[Array] = None,
+                  zs: Optional[Array] = None, *,
+                  activations: Sequence[str], quant_phase: Array,
+                  n_bits: int = 16, qat: bool = True,
+                  fxp32_phase1: bool = True,
+                  interpret: Optional[bool] = None
+                  ) -> tuple[Array, Array, Array]:
+    """Differentiable fused forward — `fxp_mlp_forward` with a custom VJP.
+
+    Same signature and return value as `fxp_mlp_forward`.  Under `jax.grad`
+    the fwd rule saves per-layer residuals in the same single launch and the
+    bwd rule runs the whole dW/db/dx chain as ONE network-resident backward
+    Pallas kernel; without differentiation the primal is the plain fused
+    forward (no residual outputs materialized).  Gradients flow to x,
+    weights, and biases; `quant_phase`, `deltas`, and `zs` get zero
+    cotangents (quant params derive from stop-gradient'd range monitors),
+    and the returned site_mins/site_maxs are stop-gradient'd — they are
+    range-monitor observations, not a differentiable head (the oracle's
+    mins/maxs DO carry gradients; parity is on y only).
+    """
+    n_layers = len(weights)
+    assert n_layers == len(biases) == len(activations), (
+        f"{n_layers} weights vs {len(biases)} biases vs "
+        f"{len(activations)} activations")
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    assert weights[0].shape[0] == x.shape[-1], (
+        f"layer-0 input dim {weights[0].shape[0]} != x feature dim "
+        f"{x.shape[-1]}")
+    dims = (int(x.shape[-1]),) + tuple(int(w.shape[-1]) for w in weights)
+    spec = _TrainSpec(activations=tuple(activations), dims=dims,
+                      n_bits=int(n_bits), qat=bool(qat),
+                      fxp32_phase1=bool(fxp32_phase1),
+                      interpret=bool(interpret))
+    deltas, zs = _norm_quant_params(deltas, zs, n_layers, qat)
+    # float carrier so the custom_vjp boundary has a float (zero) cotangent
+    phase_f = jnp.asarray(quant_phase).astype(jnp.float32).reshape(())
+    y, site_mins, site_maxs = _mlp_train_core(
+        spec, phase_f, x, tuple(weights), tuple(biases), deltas, zs)
+    # the bwd rule discards the min/max cotangents; make that explicit so a
+    # range-monitor loss errs toward zero grads *visibly* (stop_gradient)
+    # instead of looking differentiable
+    return (y, jax.lax.stop_gradient(site_mins),
+            jax.lax.stop_gradient(site_maxs))
 
 
 def fxp_mlp_infer(x: Array, weights: tuple, biases: tuple,
@@ -115,9 +268,19 @@ def fxp_mlp_infer(x: Array, weights: tuple, biases: tuple,
     return jax.lax.stop_gradient(y)
 
 
-def fused_cost_hint(dims: Sequence[int]) -> dict:
+def fused_cost_hint(dims: Sequence[int], phase: str = "act") -> dict:
     """Dispatcher hook: launch/FLOP shape of the fused path for an MLP with
     layer dims `dims` — intra-batch parallelism, the whole network in ONE
-    launch (batch is the only grid axis)."""
+    launch (batch is the only grid axis).
+
+    phase="act" is the forward/acting path; phase="train" is a
+    forward+backward step through `fxp_mlp_train`: 2 launches (fused fwd +
+    fused bwd) and ~3x the MACs (fwd, plus dx and dW matmuls per layer).
+    """
+    if phase == "train":
+        return {"launches": 2, "flops_per_item": 3 * mlp_flops(dims),
+                "parallelism": "intra_batch"}
+    if phase != "act":
+        raise ValueError(f"unknown cost phase {phase!r}; 'act' | 'train'")
     return {"launches": 1, "flops_per_item": mlp_flops(dims),
             "parallelism": "intra_batch"}

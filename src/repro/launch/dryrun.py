@@ -30,9 +30,7 @@ from repro.configs import registry
 from repro.core.parallelism import rules_for
 from repro.launch import specs as S
 from repro.launch.mesh import make_debug_mesh, make_production_mesh, mesh_context
-from repro.models import transformer as T
-from repro.models.config import (ALL_SHAPES, ATTN_GLOBAL, ATTN_LOCAL,
-                                 ModelConfig, ShapeConfig)
+from repro.models.config import ALL_SHAPES, ModelConfig, ShapeConfig
 from repro.optim import adam
 from repro.serve.engine import make_prefill, make_serve_step
 from repro.train.step import make_train_step

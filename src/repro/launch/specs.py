@@ -4,8 +4,7 @@ shardable, zero device allocation).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

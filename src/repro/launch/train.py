@@ -19,7 +19,6 @@ import json
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import ckpt
 from repro.configs import registry

@@ -12,7 +12,7 @@ audio_stub (hubert): batch["frontend"] = (B, S, frontend_dim) conv-stem frame
 """
 from __future__ import annotations
 
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,6 @@ Algorithm 1 applies to any architecture (DESIGN.md §4).
 """
 from __future__ import annotations
 
-import dataclasses
 import math
 from typing import Any, Optional
 

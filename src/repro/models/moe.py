@@ -201,7 +201,6 @@ def _moe_forward_sharded(x: Array, p: Params, cfg: ModelConfig,
     e_local = e // n_model
     dt = cfg.compute_dtype
     b, s, d = x.shape
-    f = cfg.d_ff
 
     # QAT: router/expert input sites hoisted onto the (replicated-over-model)
     # token stream — same tensor content as the dispatched buffer.

@@ -21,8 +21,6 @@ Public API
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax
@@ -440,7 +438,6 @@ def cache_specs(cfg: ModelConfig) -> Params:
 
 
 def _block_decode(x, bp, cfg, bt, *, cache, pos, rules, qat):
-    aux = jnp.float32(0)
     if bt in (ATTN_GLOBAL, ATTN_LOCAL):
         h = L.apply_norm(x, bp["ln1"], cfg)
         h, cache = L.attn_decode(h, bp["attn"], cfg, local=(bt == ATTN_LOCAL),
@@ -448,7 +445,7 @@ def _block_decode(x, bp, cfg, bt, *, cache, pos, rules, qat):
         x = x + h
         h = L.apply_norm(x, bp["ln2"], cfg)
         if cfg.is_moe:
-            h, aux = moe_mod.moe_forward(h, bp["ffn"], cfg, rules, qat)
+            h, _ = moe_mod.moe_forward(h, bp["ffn"], cfg, rules, qat)
         else:
             h = L.mlp_forward(h, bp["ffn"], cfg, rules, qat)
         return x + h, cache

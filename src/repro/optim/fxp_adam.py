@@ -23,7 +23,6 @@ import dataclasses
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import fixedpoint as fxp
 from repro.optim import adam as fadam

@@ -13,7 +13,10 @@ Backends:
     (kernels/fxp_mlp): ONE Pallas call runs the whole actor/critic forward
     with all weights VMEM-resident, QAT sites fused between layers and the
     dual-precision datapath flipped by a scalar-prefetch phase flag (no
-    lax.cond double-trace).  Forward/inference only.
+    lax.cond double-trace).  Trainable: the fused forward carries a custom
+    VJP whose backward pass is a second network-resident Pallas launch
+    (whole dW/db/dx chain, STE at the QAT sites), so `update()` runs the
+    paper's BP/WU sequence through the fused kernel too.
   * `backend="pallas_layer"` — the per-layer dual-precision AAP-core kernel
     chain (kernels/fxp_matmul), precision switched by the QAT phase at
     runtime via lax.cond; kept as the reference/fallback for the fused path.
@@ -31,7 +34,7 @@ from repro.core import fixedpoint as fxp
 from repro.core.qat import (FrozenQuant, QATContext, QATState, freeze_quant,
                             quantize_grads)
 from repro.kernels.fxp_matmul.ops import fxp_dense, fxp_dense_chain
-from repro.kernels.fxp_mlp.ops import fxp_mlp_forward, fxp_mlp_infer
+from repro.kernels.fxp_mlp.ops import fxp_mlp_infer, fxp_mlp_train
 from repro.optim import adam, fxp_adam
 from repro.rl.envs.base import EnvSpec
 
@@ -109,17 +112,19 @@ def _fused_mlp(params: Params, x: Array, ctx: Optional[QATContext],
     """Whole-network forward through the fused kernel (kernels/fxp_mlp):
     one Pallas call, weights VMEM-resident, QAT sites fused in-pipeline.
     Range observations flow back into `ctx` via `observe`, so QAT state
-    evolves identically to the per-layer path."""
+    evolves identically to the per-layer path.  `fxp_mlp_train` carries the
+    custom VJP: pure inference runs the plain fused forward, while under
+    `jax.grad` the backward chain is one more network-resident launch."""
     n = len(activations)
     ws = tuple(params[f"l{i}"]["w"] for i in range(n))
     bs = tuple(params[f"l{i}"]["b"] for i in range(n))
     if ctx is None or not ctx.state.config.enabled:
-        y, _, _ = fxp_mlp_forward(x, ws, bs, activations=activations,
-                                  quant_phase=jnp.array(False), qat=False)
+        y, _, _ = fxp_mlp_train(x, ws, bs, activations=activations,
+                                quant_phase=jnp.array(False), qat=False)
         return y
     cfg = ctx.state.config
     deltas, zs = ctx.site_quant_params(sites)
-    y, mns, mxs = fxp_mlp_forward(
+    y, mns, mxs = fxp_mlp_train(
         x, ws, bs, deltas, zs, activations=activations,
         quant_phase=ctx.state.quantized_phase, n_bits=cfg.n_bits,
         fxp32_phase1=cfg.fxp32_phase1)
@@ -250,11 +255,18 @@ def act_batch(actor: Params, obs: Array,
 def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
            ) -> tuple[DDPGState, dict[str, Array]]:
     """One FIXAR timestep's training work: critic BP/WU then actor BP/WU
-    (operation sequence of Fig. 3), QAT-aware, fixed-point weights."""
-    if cfg.backend != "jnp":
+    (operation sequence of Fig. 3), QAT-aware, fixed-point weights.
+
+    Trains with `backend="jnp"` (XLA autodiff) or `backend="pallas"` (the
+    fused kernel's custom VJP: fwd + bwd are one network-resident Pallas
+    launch each).  The per-layer chain has no autodiff rule and stays
+    inference-only.
+    """
+    if cfg.backend not in ("jnp", "pallas"):
         raise ValueError(
-            f"backend={cfg.backend!r} is forward/inference-only (pallas_call "
-            "has no autodiff rule); train with backend='jnp'")
+            f"backend={cfg.backend!r} is forward/inference-only (the "
+            "per-layer kernel chain has no autodiff rule); train with "
+            "backend='jnp' or backend='pallas'")
     obs, action = batch["obs"], batch["action"]
     reward, next_obs = batch["reward"], batch["next_obs"]
     done = batch["done"].astype(jnp.float32)

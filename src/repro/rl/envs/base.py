@@ -10,7 +10,7 @@ breakdown).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Protocol
+from typing import Protocol
 
 import jax
 import jax.numpy as jnp

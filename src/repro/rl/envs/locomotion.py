@@ -24,12 +24,11 @@ Dims match the paper:  HalfCheetah 17/6, Hopper 11/3 (paper's '6' is a typo
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 
-from repro.rl.envs.base import Env, EnvSpec, EnvState
+from repro.rl.envs.base import EnvSpec, EnvState
 
 Array = jax.Array
 

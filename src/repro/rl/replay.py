@@ -4,7 +4,6 @@ moved on-device for the fused loop; the host loop keeps it on CPU arrays).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any
 
 import jax
 import jax.numpy as jnp

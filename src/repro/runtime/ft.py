@@ -20,7 +20,6 @@ Straggler mitigation: per-host step-time EMA; hosts slower than
 from __future__ import annotations
 
 import dataclasses
-import math
 import time
 from typing import Callable, Optional
 

@@ -6,8 +6,6 @@ simple generate() loop for the examples.
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

@@ -18,20 +18,23 @@ The dispatcher scores each mode with a two-term affine cost
                + B * kflops_per_item * us_per_kflop[mode]
 
 and picks the argmin.  Launch counts and FLOP shapes come from the kernels'
-own cost hints (`fused_cost_hint` / `chain_cost_hint`), so the model tracks
-the kernels if their structure changes.  The default coefficients encode the
-hardware-shaped regime (fused pays a big single-launch setup for the best
-per-item rate; the per-layer chain is the cheapest way to finish one vector);
-`CostModel.from_bench` recalibrates the per-item rates from measured
-`BENCH_fused_mlp.json` acting-path IPS, which is what `benchmarks/serve_bench`
-does on real hardware.
+own cost hints (`fused_cost_hint` / `chain_cost_hint`, each with an
+"act"/"train" phase axis now that the fused kernel trains through its custom
+VJP), so the model tracks the kernels if their structure changes.  The
+default coefficients encode the hardware-shaped regime (fused pays a big
+single-launch setup for the best per-item rate; the per-layer chain is the
+cheapest way to finish one vector); `CostModel.from_bench` refits the model
+from measured `BENCH_fused_mlp.json` acting-path IPS — with the two-batch
+`actor_ips_by_batch` measurements it separates slope (per-item rate) from
+intercept (launch overhead), which is what `benchmarks/serve_bench` consumes
+on real hardware.
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
-from typing import Optional, Sequence
+from typing import Sequence
 
 from repro.kernels._compat import mlp_flops as flops_per_item
 from repro.kernels.fxp_matmul.ops import chain_cost_hint
@@ -43,16 +46,25 @@ MODES = ("fused", "layer", "jnp")
 BACKEND_TO_MODE = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp"}
 
 
-def cost_hint(mode: str, dims: Sequence[int]) -> dict:
+def cost_hint(mode: str, dims: Sequence[int], phase: str = "act") -> dict:
     """The per-mode launch/FLOP shape: the two kernel modes describe
     themselves (`fused_cost_hint` / `chain_cost_hint`); the jnp fallback is
-    one fused XLA dispatch over the same MLP."""
+    one fused XLA dispatch over the same MLP.
+
+    phase="act" is the forward/acting path (serving); phase="train" models
+    one fwd+bwd step (the fused kernel's custom-VJP pair = 2 launches and
+    ~3x the MACs), keeping the dispatcher's cost axis consistent with what
+    `kernels/fxp_mlp.fxp_mlp_train` actually launches.
+    """
+    if phase not in ("act", "train"):
+        raise ValueError(f"unknown cost phase {phase!r}; 'act' | 'train'")
     if mode == "fused":
-        return fused_cost_hint(dims)
+        return fused_cost_hint(dims, phase)
     if mode == "layer":
-        return chain_cost_hint(dims)
+        return chain_cost_hint(dims, phase)
     if mode == "jnp":
-        return {"launches": 1, "flops_per_item": flops_per_item(dims),
+        mult = 3 if phase == "train" else 1
+        return {"launches": 1, "flops_per_item": mult * flops_per_item(dims),
                 "parallelism": "none"}
     raise ValueError(f"unknown serve mode {mode!r}; expected one of {MODES}")
 
@@ -101,13 +113,22 @@ class CostModel:
 
     @staticmethod
     def from_bench(path, fallback_to_default: bool = True) -> "CostModel":
-        """Recalibrate per-item rates from `BENCH_fused_mlp.json`.
+        """Recalibrate the affine cost model from `BENCH_fused_mlp.json`.
 
-        The kernel bench measures acting-path IPS per backend at one batch
-        size B0; we keep the default launch overheads and back out each
-        mode's marginal rate from `B0/IPS = launches*overhead + B0*k*rate`.
-        Missing file / missing modes keep their defaults (the model must
-        stay total — the dispatcher cannot refuse to answer).
+        Preferred input: `actor_ips_by_batch` — acting-path IPS per backend
+        at TWO (or more) batch sizes.  Two measurements separate the slope
+        from the intercept of `t(B) = launches*per_launch + B*kflops*rate`:
+        the extreme-batch pair gives `slope = (t2-t1)/(B2-B1)` (the per-item
+        rate) and `intercept = t1 - slope*B1` (the launch overhead), so BOTH
+        coefficients are fitted instead of only the marginal rate.
+
+        Fallback: legacy single-batch `actor_ips` — keep the default launch
+        overheads and back out each mode's marginal rate from
+        `B0/IPS = launches*overhead + B0*k*rate`.
+
+        Missing file / missing modes / degenerate fits keep their defaults
+        (the model must stay total — the dispatcher cannot refuse to
+        answer).
         """
         path = pathlib.Path(path)
         costs = dict(DEFAULT_COSTS)
@@ -119,20 +140,49 @@ class CostModel:
             data = json.loads(path.read_text())
             b0 = int(data.get("config", {}).get("batch", 256))
             net = list(data.get("config", {}).get("net", [17, 400, 300, 6]))
-            for backend, ips in data.get("actor_ips", {}).items():
+            by_batch = data.get("actor_ips_by_batch", {})
+            single = data.get("actor_ips", {})
+            for backend in sorted({*single, *by_batch}):
                 mode = BACKEND_TO_MODE.get(backend)
                 if mode is None:
                     continue
-                ips = float(ips)
-                if ips <= 0:
+                try:
+                    hint = cost_hint(mode, net)
+                    kflops = hint["flops_per_item"] / 1e3
+
+                    # ---- two-point fit: slope AND intercept ---------------
+                    points = sorted(
+                        (int(b), int(b) / float(v) * 1e6)
+                        for b, v in dict(by_batch.get(backend, {})).items()
+                        if float(v) > 0)
+                    if len(points) >= 2 and points[0][0] != points[-1][0]:
+                        (b1, t1), (b2, t2) = points[0], points[-1]
+                        slope = (t2 - t1) / (b2 - b1)
+                        intercept = t1 - slope * b1
+                        if slope > 0 and intercept > 0:
+                            costs[mode] = ModeCost(
+                                per_launch_us=intercept / hint["launches"],
+                                us_per_kflop=slope / kflops)
+                            continue
+                        # degenerate fit (noise gave a negative
+                        # coefficient): fall through to single-point
+
+                    # ---- legacy single-point: rate only, default overheads
+                    ips = float(single.get(backend, 0.0))
+                    if ips <= 0:
+                        continue
+                    total_us = b0 / ips * 1e6
+                    overhead = costs[mode].per_launch_us * hint["launches"]
+                    marginal_us = max(total_us - overhead, 0.1 * total_us)
+                    costs[mode] = ModeCost(
+                        costs[mode].per_launch_us,
+                        marginal_us / (b0 * kflops))
+                except (ValueError, TypeError, KeyError, AttributeError):
+                    # one malformed backend entry must not discard the
+                    # other modes' fits — THIS mode keeps its default
+                    if not fallback_to_default:
+                        raise
                     continue
-                hint = cost_hint(mode, net)
-                total_us = b0 / ips * 1e6
-                overhead = costs[mode].per_launch_us * hint["launches"]
-                marginal_us = max(total_us - overhead, 0.1 * total_us)
-                costs[mode] = ModeCost(
-                    costs[mode].per_launch_us,
-                    marginal_us / (b0 * hint["flops_per_item"] / 1e3))
         except (ValueError, TypeError, KeyError, AttributeError,
                 OSError) as err:
             # truncated/malformed bench file (e.g. kernel_bench killed

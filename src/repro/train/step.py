@@ -12,7 +12,6 @@ slices with an f32 grad accumulator — the standard large-batch recipe.
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional
 
 import jax

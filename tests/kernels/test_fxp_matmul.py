@@ -63,7 +63,6 @@ def test_half_precision_is_coarser_but_2x_cheaper():
     x = jax.random.normal(jax.random.key(5), (64, 400))
     w = jax.random.normal(jax.random.key(6), (400, 300)) * 0.05
     half = fxp_dense(x, w, None, full_precision=False)
-    true = x @ w
     hi, _ = limb_split(x)
     expected = hi @ w
     np.testing.assert_allclose(np.asarray(half), np.asarray(expected),

@@ -187,6 +187,118 @@ def test_cost_model_calibrates_from_bench_json(tmp_path):
     assert CostModel.from_bench(bad).costs == DEFAULT_COSTS
 
 
+def test_cost_model_two_point_fit_recovers_both_coefficients(tmp_path):
+    """Two batch sizes separate slope from intercept: synthesize IPS from a
+    known affine model and check from_bench recovers BOTH the per-launch
+    overhead and the per-item rate (the single-point path could only refit
+    the rate and kept default overheads)."""
+    from repro.serve.policy.dispatch import cost_hint
+
+    truth = {"pallas": (80.0, 0.002), "pallas_layer": (4.0, 0.006),
+             "jnp": (30.0, 0.010)}
+    mode_of = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp"}
+    by_batch = {}
+    for backend, (per_launch, rate) in truth.items():
+        hint = cost_hint(mode_of[backend], ACTOR_DIMS)
+        by_batch[backend] = {}
+        for b in (64, 512):
+            t_us = (per_launch * hint["launches"]
+                    + b * hint["flops_per_item"] / 1e3 * rate)
+            by_batch[backend][str(b)] = b / (t_us * 1e-6)
+    bench = {"config": {"batch": 512, "net": ACTOR_DIMS},
+             "actor_ips": {k: v["512"] for k, v in by_batch.items()},
+             "actor_ips_by_batch": by_batch}
+    path = tmp_path / "BENCH_fused_mlp.json"
+    path.write_text(json.dumps(bench))
+    cm = CostModel.from_bench(path)
+    for backend, (per_launch, rate) in truth.items():
+        got = cm.costs[mode_of[backend]]
+        np.testing.assert_allclose(got.per_launch_us, per_launch, rtol=1e-6,
+                                   err_msg=f"{backend} overhead")
+        np.testing.assert_allclose(got.us_per_kflop, rate, rtol=1e-6,
+                                   err_msg=f"{backend} rate")
+
+
+def test_cost_model_duplicate_batch_keys_stay_total(tmp_path):
+    """Two JSON keys parsing to the same int batch ("64", " 64") must not
+    divide by zero — the model stays total and falls back to the
+    single-point path / defaults."""
+    bench = {"config": {"batch": 64, "net": ACTOR_DIMS},
+             "actor_ips": {"pallas": 50_000.0},
+             "actor_ips_by_batch": {"pallas": {"64": 1000.0, " 64": 900.0}}}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(bench))
+    cm = CostModel.from_bench(path)
+    fused = cm.costs["fused"]
+    assert fused.per_launch_us > 0 and fused.us_per_kflop > 0
+
+
+def test_cost_model_two_point_without_single_point_entry(tmp_path):
+    """actor_ips_by_batch alone (backend absent from actor_ips) must still
+    drive the two-point fit."""
+    bench = {"config": {"batch": 512, "net": ACTOR_DIMS},
+             "actor_ips": {},
+             "actor_ips_by_batch": {"pallas": {"64": 60_000.0,
+                                               "512": 90_000.0}}}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(bench))
+    cm = CostModel.from_bench(path)
+    assert cm.costs["fused"] != DEFAULT_COSTS["fused"]
+
+
+def test_cost_model_malformed_backend_entry_keeps_other_fits(tmp_path):
+    """A broken entry for one backend must not discard another backend's
+    successful calibration (per-mode fallback, not file-level)."""
+    bench = {"config": {"batch": 512, "net": ACTOR_DIMS},
+             "actor_ips": {"jnp": "not-a-number"},
+             "actor_ips_by_batch": {
+                 "pallas": {"64": 60_000.0, "512": 90_000.0},
+                 "jnp": {"b64": "junk"}}}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(bench))
+    cm = CostModel.from_bench(path)
+    assert cm.source == str(path)
+    assert cm.costs["fused"] != DEFAULT_COSTS["fused"]   # pallas fit kept
+    assert cm.costs["jnp"] == DEFAULT_COSTS["jnp"]       # jnp -> default
+
+
+def test_cost_model_two_point_degenerate_falls_back(tmp_path):
+    """A noise-degenerate pair (flat or inverted timings -> non-positive
+    slope/intercept) must fall back to the single-point recalibration, not
+    produce negative costs."""
+    b1, b2 = 64, 512
+    # identical per-batch latency => slope 0 after converting IPS->time
+    ips1, ips2 = b1 / 100e-6, b2 / 100e-6
+    bench = {"config": {"batch": b2, "net": ACTOR_DIMS},
+             "actor_ips": {"pallas": ips2},
+             "actor_ips_by_batch": {"pallas": {str(b1): ips1,
+                                               str(b2): ips2}}}
+    path = tmp_path / "bench.json"
+    path.write_text(json.dumps(bench))
+    cm = CostModel.from_bench(path)
+    fused = cm.costs["fused"]
+    assert fused.per_launch_us > 0 and fused.us_per_kflop > 0
+    # single-point fallback keeps the default launch overhead
+    assert fused.per_launch_us == DEFAULT_COSTS["fused"].per_launch_us
+
+
+def test_cost_hint_train_phase():
+    """The train-phase hints model the custom-VJP step: fused = fwd + bwd
+    launches and ~3x MACs; invalid phases raise."""
+    from repro.serve.policy.dispatch import cost_hint
+
+    for mode in MODES:
+        act = cost_hint(mode, ACTOR_DIMS, "act")
+        train = cost_hint(mode, ACTOR_DIMS, "train")
+        assert train["launches"] == 2 * act["launches"] or mode == "jnp"
+        assert train["flops_per_item"] == 3 * act["flops_per_item"]
+        with pytest.raises(ValueError):
+            cost_hint(mode, ACTOR_DIMS, "serve")
+    assert cost_hint("fused", ACTOR_DIMS, "train")["launches"] == 2
+    assert cost_hint("layer", ACTOR_DIMS, "train")["launches"] == \
+        2 * (len(ACTOR_DIMS) - 1)
+
+
 # --------------------------------------------------------------------- #
 # micro-batcher
 # --------------------------------------------------------------------- #

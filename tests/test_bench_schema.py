@@ -1,0 +1,103 @@
+"""Bench-artifact schema gate (benchmarks/schema.py).
+
+The checked-in BENCH_*.json artifacts and anything `benchmarks/run.py
+--smoke` emits must validate, and representative drift (missing section,
+renamed key, wrong type, single-batch IPS map) must FAIL — that is the whole
+point of the CI schema job: format drift breaks the build instead of
+silently downgrading `CostModel.from_bench` to defaults.
+"""
+import copy
+import json
+import pathlib
+import sys
+
+import pytest
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:   # benchmarks/ is a namespace package
+    sys.path.insert(0, str(REPO))
+
+from benchmarks import schema as bench_schema  # noqa: E402
+
+
+def _load(name):
+    return json.loads((REPO / name).read_text())
+
+
+@pytest.mark.parametrize("name", ["BENCH_fused_mlp.json",
+                                  "BENCH_serve_policy.json"])
+def test_checked_in_artifacts_validate(name):
+    path = REPO / name
+    assert path.exists(), f"{name} missing at repo root"
+    assert bench_schema.validate_file(path) in bench_schema.SCHEMAS_BY_TAG
+
+
+def test_unknown_schema_tag_rejected():
+    with pytest.raises(bench_schema.SchemaError, match="unknown"):
+        bench_schema.validate_report({"schema": "fixar/nope/v9"})
+
+
+def test_fused_mlp_drift_fails():
+    good = _load("BENCH_fused_mlp.json")
+    bench_schema.validate_report(good)
+
+    for mutate in (
+        lambda d: d.pop("train"),                       # section dropped
+        lambda d: d.pop("actor_ips_by_batch"),          # calib input dropped
+        lambda d: d["train"].pop("updates_per_s"),      # key renamed away
+        lambda d: d["config"].update(net="17-400-300-6"),   # type drift
+        lambda d: d["actor_ips_by_batch"].update(
+            jnp={"256": 1.0}),                          # one batch only
+        lambda d: d.update(schema="fixar/fused_mlp_bench/v1"),  # old tag
+    ):
+        bad = copy.deepcopy(good)
+        mutate(bad)
+        with pytest.raises(bench_schema.SchemaError):
+            bench_schema.validate_report(
+                bad, bench_schema.FUSED_MLP_SCHEMA
+                if bad.get("schema") != "fixar/fused_mlp_bench/v2"
+                else None)
+
+
+def test_serve_policy_drift_fails():
+    good = _load("BENCH_serve_policy.json")
+    bench_schema.validate_report(good)
+    for mutate in (
+        lambda d: d.pop("dispatch"),
+        lambda d: d["modes"].pop("fused"),
+        lambda d: d["modes"]["jnp"].pop("ips_big"),
+        lambda d: d["adaptive"].pop("mode_histogram"),
+    ):
+        bad = copy.deepcopy(good)
+        mutate(bad)
+        with pytest.raises(bench_schema.SchemaError):
+            bench_schema.validate_report(bad)
+
+
+def test_fallback_validator_agrees_with_jsonschema():
+    """The stdlib-only fallback must accept what jsonschema accepts and
+    reject the same representative drift, so bare CI images get the same
+    gate."""
+    good = _load("BENCH_fused_mlp.json")
+    bench_schema._fallback_validate(good, bench_schema.FUSED_MLP_SCHEMA)
+    bad = copy.deepcopy(good)
+    del bad["train"]["speedup_vs_jnp"]
+    with pytest.raises(bench_schema.SchemaError):
+        bench_schema._fallback_validate(bad, bench_schema.FUSED_MLP_SCHEMA)
+    bad2 = copy.deepcopy(good)
+    bad2["actor_ips"]["jnp"] = "fast"
+    with pytest.raises(bench_schema.SchemaError):
+        bench_schema._fallback_validate(bad2, bench_schema.FUSED_MLP_SCHEMA)
+
+
+def test_cli_reports_ok_and_fail(tmp_path, capsys):
+    good = REPO / "BENCH_fused_mlp.json"
+    assert bench_schema.main(["--check", str(good)]) == 0
+    bad = tmp_path / "BENCH_fused_mlp.json"
+    data = _load("BENCH_fused_mlp.json")
+    del data["phases"]
+    bad.write_text(json.dumps(data))
+    assert bench_schema.main(["--check", str(bad)]) == 1
+    truncated = tmp_path / "trunc.json"
+    truncated.write_text('{"schema": "fixar/fused')
+    assert bench_schema.main([str(truncated)]) == 1

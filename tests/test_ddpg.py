@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.rl import ddpg, loop, replay
+from repro.rl import ddpg, loop
 from repro.rl.envs.locomotion import make
 
 

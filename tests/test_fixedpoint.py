@@ -8,7 +8,6 @@ except ImportError:  # fall back to the local deterministic shim
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.core import fixedpoint as fxp
 

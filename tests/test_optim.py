@@ -1,6 +1,4 @@
-import jax
 import jax.numpy as jnp
-import numpy as np
 import pytest
 
 from repro.optim import adam, fxp_adam, schedule

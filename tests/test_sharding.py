@@ -1,7 +1,6 @@
 """Distribution tests: adaptive-parallelism rules + 8-device subprocess
 dry-runs (XLA device-count flag must be set before jax import, hence
 subprocess)."""
-import json
 import pathlib
 import subprocess
 import sys

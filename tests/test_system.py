@@ -1,14 +1,9 @@
 """End-to-end behaviour tests for the FIXAR platform."""
-import dataclasses
-import json
-import subprocess
-import sys
 import pathlib
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.configs import registry
 from repro.data.synthetic import DataConfig, DataIterator
