@@ -43,6 +43,8 @@ FUSED_JSON = _REPO / "BENCH_fused_mlp.json"
 SMOKE_FUSED_JSON = _REPO / "results" / "bench" / "smoke" / FUSED_JSON.name
 ACTOR_BATCHES = (64, 256)        # two points -> slope/intercept separation
 SMOKE_ACTOR_BATCHES = (8, 32)
+TRAIN_BATCHES = (32, 128)        # same two-point idea for the train fit
+SMOKE_TRAIN_BATCHES = (8, 16)
 
 
 def _count_pallas_calls(fn, *args) -> int:
@@ -84,14 +86,21 @@ def _dummy_batch(spec, n, key=0):
 
 def bench_train_step(report: dict, env, cfg, state, smoke: bool) -> None:
     """Training-step throughput through the fused kernel's custom VJP vs
-    jnp autodiff — FIXAR's headline is *training* IPS (Fig. 8)."""
+    jnp autodiff — FIXAR's headline is *training* IPS (Fig. 8).
+
+    Measured at TWO batch sizes (`ips_by_batch`) so
+    `CostModel.from_bench` can fit the train-phase affine coefficients
+    (slope = per-item rate, intercept = fwd+bwd launch overhead) the same
+    way `actor_ips_by_batch` feeds the acting-path fit."""
     from repro.rl import ddpg
 
-    batch_size = 16 if smoke else 128
+    train_batches = SMOKE_TRAIN_BATCHES if smoke else TRAIN_BATCHES
+    batch_size = train_batches[-1]
     iters, warmup = (2, 1) if smoke else (5, 2)
     batch = _dummy_batch(env.spec, batch_size)
 
-    res = {"batch": batch_size, "updates_per_s": {}, "train_ips": {},
+    res = {"batch": batch_size, "batches": list(train_batches),
+           "updates_per_s": {}, "train_ips": {}, "ips_by_batch": {},
            "pallas_calls_traced": {}}
     for backend in ("jnp", "pallas"):
         bcfg = dataclasses.replace(cfg, backend=backend,
@@ -99,11 +108,18 @@ def bench_train_step(report: dict, env, cfg, state, smoke: bool) -> None:
         res["pallas_calls_traced"][backend] = _count_pallas_calls(
             lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg), state, batch)
         upd = jax.jit(lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg))
-        us = time_fn(lambda: upd(state, batch), iters=iters, warmup=warmup)
-        ups = 1e6 / us
+        per_batch = {}
+        for tb in train_batches:
+            sub = {k: v[:tb] for k, v in batch.items()}
+            us = time_fn(lambda: upd(state, sub), iters=iters,
+                         warmup=warmup)
+            per_batch[str(tb)] = tb / (us * 1e-6)   # trained samples / s
+            if tb == batch_size:
+                ups = 1e6 / us
+        res["ips_by_batch"][backend] = per_batch
         res["updates_per_s"][backend] = ups
         res["train_ips"][backend] = ups * batch_size
-        emit(f"kernel/fxp_mlp/train_step/{backend}", us,
+        emit(f"kernel/fxp_mlp/train_step/{backend}", 1e6 / ups,
              f"updates_per_s={ups:.2f};train_ips={ups * batch_size:.0f};"
              f"batch={batch_size}")
     res["speedup_vs_jnp"] = (res["updates_per_s"]["pallas"]
@@ -138,7 +154,7 @@ def bench_fused_mlp(smoke: bool = False) -> dict:
         return f
 
     report = {
-        "schema": "fixar/fused_mlp_bench/v2",
+        "schema": "fixar/fused_mlp_bench/v3",
         "config": {"batch": primary, "batches": list(batches), "net": dims,
                    "backend": jax.default_backend(), "smoke": smoke},
         "pallas_calls_traced": {},

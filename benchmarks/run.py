@@ -19,12 +19,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced step counts (CI-scale)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI schema gate: only kernel+serve benches at tiny "
-                         "dims/batches (interpret mode on CPU); emits the "
-                         "same BENCH_*.json shapes for benchmarks/schema.py")
+                    help="CI schema gate: only kernel+serve+learner benches "
+                         "at tiny dims/batches (interpret mode on CPU); "
+                         "emits the same BENCH_*.json shapes for "
+                         "benchmarks/schema.py")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig7,fig8,fig9,fig10,"
-                         "tableii,kernel,serve")
+                         "tableii,kernel,serve,learner")
     args = ap.parse_args(argv)
     if args.smoke and (args.only or args.quick):
         ap.error("--smoke fixes its own bench set/scale; drop --only/--quick")
@@ -34,14 +35,16 @@ def main(argv=None) -> None:
         return only is None or name in only
 
     from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
-                            fig10_accelerator, kernel_bench, serve_bench,
-                            tableii_compare)
+                            fig10_accelerator, kernel_bench, learner_bench,
+                            serve_bench, tableii_compare)
 
     if args.smoke:
-        # kernel before serve: the dispatcher calibrates from the fresh
+        # calibration order: kernel FIRST — both dispatchers (serve's
+        # act-phase, learner's train-phase) calibrate from the fresh
         # BENCH_fused_mlp.json
         kernel_bench.main(["--smoke"])
         serve_bench.main(["--smoke"])
+        learner_bench.main(["--smoke"])
         return
 
     if want("kernel"):
@@ -50,6 +53,10 @@ def main(argv=None) -> None:
         # after kernel so the dispatcher calibrates from a fresh
         # BENCH_fused_mlp.json when both run
         serve_bench.main(["--quick"] if args.quick else [])
+    if want("learner"):
+        # same calibration dependency as serve (train-phase fit from the
+        # kernel bench's "train" section)
+        learner_bench.main(["--quick"] if args.quick else [])
     if want("fig8"):
         fig8_throughput.main(["--steps", "400" if args.quick else "2000"])
     if want("fig9"):

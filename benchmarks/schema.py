@@ -1,14 +1,15 @@
 """JSON schemas for the tracked benchmark artifacts.
 
-`BENCH_fused_mlp.json` and `BENCH_serve_policy.json` are consumed
-programmatically — `CostModel.from_bench` calibrates the serving dispatcher
-from the kernel bench, and the CI bench job diffs the serving numbers across
-PRs — so format drift must fail the build instead of silently degrading the
-cost model to its defaults.  This module is the single source of truth for
-both shapes:
+`BENCH_fused_mlp.json`, `BENCH_serve_policy.json`, and `BENCH_learner.json`
+are consumed programmatically — `CostModel.from_bench` calibrates both the
+serving (act-phase) and learner (train-phase) dispatchers from the kernel
+bench, and the CI bench job diffs the serving/training numbers across PRs —
+so format drift must fail the build instead of silently degrading the cost
+model to its defaults.  This module is the single source of truth for all
+three shapes:
 
     python -m benchmarks.schema --check BENCH_fused_mlp.json \
-        BENCH_serve_policy.json
+        BENCH_serve_policy.json BENCH_learner.json
 
 validates files against the schema matching their `schema` tag (exit code 1
 on the first violation).  CI runs exactly that after `benchmarks/run.py
@@ -46,7 +47,9 @@ FUSED_MLP_SCHEMA = {
     "required": ["schema", "config", "pallas_calls_traced", "phases",
                  "actor_ips", "actor_ips_by_batch", "train"],
     "properties": {
-        "schema": {"const": "fixar/fused_mlp_bench/v2"},
+        # v3: train section carries two-batch ips_by_batch so from_bench
+        # can fit the train-phase slope AND intercept
+        "schema": {"const": "fixar/fused_mlp_bench/v3"},
         "config": {
             "type": "object",
             "required": ["batch", "batches", "net", "backend"],
@@ -79,11 +82,15 @@ FUSED_MLP_SCHEMA = {
         "train": {
             "type": "object",
             "required": ["batch", "updates_per_s", "train_ips",
-                         "pallas_calls_traced", "speedup_vs_jnp"],
+                         "ips_by_batch", "pallas_calls_traced",
+                         "speedup_vs_jnp"],
             "properties": {
                 "batch": {"type": "integer"},
+                "batches": {"type": "array", "items": {"type": "integer"},
+                            "minItems": 2},
                 "updates_per_s": _NUM_MAP,
                 "train_ips": _NUM_MAP,
+                "ips_by_batch": _IPS_BY_BATCH,
                 "pallas_calls_traced": {
                     "type": "object",
                     "additionalProperties": {"type": "integer"},
@@ -131,9 +138,70 @@ SERVE_POLICY_SCHEMA = {
     },
 }
 
+# the learner bench: the training-throughput twin of the serving artifact
+# (updates/sec, train IPS, latency percentiles, per-phase dispatch tables
+# and the adaptive engine's mode histogram keyed by phase)
+LEARNER_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "type": "object",
+    "required": ["schema", "config", "modes", "dispatch", "adaptive"],
+    "properties": {
+        "schema": {"const": "fixar/learner_bench/v1"},
+        "config": {
+            "type": "object",
+            "required": ["net", "buckets", "big_batch", "backend", "qat"],
+            "properties": {
+                "net": {"type": "array", "items": {"type": "integer"},
+                        "minItems": 2},
+                "buckets": {"type": "array", "items": {"type": "integer"},
+                            "minItems": 3},
+                "big_batch": {"type": "integer"},
+                "backend": _STR,
+                "qat": _STR,
+                "smoke": {"type": "boolean"},
+            },
+        },
+        "modes": {
+            "type": "object",
+            "required": ["fused", "jnp"],
+            "additionalProperties": {
+                "type": "object",
+                "required": ["updates_per_s", "train_ips", "p50_ms",
+                             "p99_ms", "updates"],
+            },
+        },
+        "dispatch": {
+            "type": "object",
+            "required": ["act", "train", "calibration_source"],
+            "properties": {
+                "act": {"type": "object", "additionalProperties": _STR},
+                "train": {"type": "object", "additionalProperties": _STR},
+                "calibration_source": _STR,
+            },
+        },
+        "adaptive": {
+            "type": "object",
+            "required": ["requests", "updates", "transitions",
+                         "updates_per_s_wall", "train_ips_wall", "p50_ms",
+                         "p99_ms", "batch_occupancy", "mode_histogram"],
+            "properties": {
+                "mode_histogram": {       # per-phase: {"train": {mode: n}}
+                    "type": "object",
+                    "required": ["train"],
+                    "additionalProperties": {
+                        "type": "object",
+                        "additionalProperties": {"type": "integer"},
+                    },
+                },
+            },
+        },
+    },
+}
+
 SCHEMAS_BY_TAG = {
-    "fixar/fused_mlp_bench/v2": FUSED_MLP_SCHEMA,
+    "fixar/fused_mlp_bench/v3": FUSED_MLP_SCHEMA,
     "fixar/serve_policy_bench/v2": SERVE_POLICY_SCHEMA,
+    "fixar/learner_bench/v1": LEARNER_SCHEMA,
 }
 
 

@@ -252,6 +252,17 @@ def act_batch(actor: Params, obs: Array,
     return jnp.clip(y, -1.0, 1.0)
 
 
+def _wmean(x: Array, w: Optional[Array]) -> Array:
+    """Mean over valid rows: plain `jnp.mean` when `w` is None (the
+    unweighted path is kept verbatim so existing update programs are
+    untouched), else sum(w*x)/sum(w) — padded rows carry w=0 and contribute
+    exactly zero to the loss and its gradients."""
+    if w is None:
+        return jnp.mean(x)
+    w = w.astype(jnp.float32)
+    return jnp.sum(x * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
 def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
            ) -> tuple[DDPGState, dict[str, Array]]:
     """One FIXAR timestep's training work: critic BP/WU then actor BP/WU
@@ -261,6 +272,14 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
     fused kernel's custom VJP: fwd + bwd are one network-resident Pallas
     launch each).  The per-layer chain has no autodiff rule and stays
     inference-only.
+
+    `batch` may carry an optional `"mask"` row — (B,) validity weights, the
+    contract `train/learner` uses to pad update streams to its batching
+    buckets: masked-out rows get zero loss weight (zero gradient), so a
+    bucket-padded update computes the same BP/WU as the unpadded batch.
+    The padded rows do still flow through the QAT range monitors (min/max
+    extrema; all-zero pad rows only widen a range that excludes 0, which
+    mid-training activations essentially never do).
     """
     if cfg.backend not in ("jnp", "pallas"):
         raise ValueError(
@@ -270,6 +289,7 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
     obs, action = batch["obs"], batch["action"]
     reward, next_obs = batch["reward"], batch["next_obs"]
     done = batch["done"].astype(jnp.float32)
+    mask = batch.get("mask")
 
     # ---- targets (inference on target nets, no range updates) -------------
     tctx = QATContext(state.qat)
@@ -283,7 +303,7 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
     def critic_loss(cp):
         ctx = QATContext(state.qat)
         q = critic_forward(cp, obs, action, ctx, backend=cfg.backend)
-        return jnp.mean(jnp.square(q - y)), ctx.finalize()
+        return _wmean(jnp.square(q - y), mask), ctx.finalize()
 
     (closs, qat1), cgrads = jax.value_and_grad(critic_loss, has_aux=True)(
         state.critic)
@@ -300,7 +320,7 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
         ctx = QATContext(dataclasses.replace(qat1))
         a = actor_forward(ap, obs, ctx, backend=cfg.backend)
         q = critic_forward(critic, obs, a, ctx, backend=cfg.backend)
-        return -jnp.mean(q), ctx.finalize()
+        return -_wmean(q, mask), ctx.finalize()
 
     (aloss, qat2), agrads = jax.value_and_grad(actor_loss, has_aux=True)(
         state.actor)
@@ -321,5 +341,5 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
         actor_opt=actor_opt, critic_opt=critic_opt,
         qat=qat2.tick(), step=state.step + 1)
     metrics = {"critic_loss": closs, "actor_loss": aloss,
-               "q_mean": jnp.mean(y)}
+               "q_mean": _wmean(y, mask)}
     return new_state, metrics

@@ -120,34 +120,53 @@ def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
 
     history = {"step": [], "eval_reward": [], "train_reward": [], "ips": []}
     steps_done = 0
+    # accumulate across the whole eval window, not just the chunk that
+    # happens to land on the eval boundary — with eval_every > chunk the
+    # recorded train_reward/ips used to describe only the LAST chunk
+    win_reward, win_chunks, win_steps, win_secs = 0.0, 0, 0, 0.0
     while steps_done < cfg.total_steps:
         t0 = time.perf_counter()
         ts, mean_r = run_chunk(ts)
         jax.block_until_ready(mean_r)
         dt = time.perf_counter() - t0
         steps_done += chunk
+        win_reward += float(mean_r)
+        win_chunks += 1
+        win_steps += chunk * max(cfg.n_envs, 1)
+        win_secs += dt
         if steps_done % cfg.eval_every < chunk:
             k_eval = jax.random.fold_in(jax.random.key(cfg.seed + 7), steps_done)
             ev = evaluate(env, ts.agent, dcfg, k_eval, cfg.eval_episodes)
             history["step"].append(steps_done)
             history["eval_reward"].append(float(ev))
-            history["train_reward"].append(float(mean_r))
-            history["ips"].append(chunk * max(cfg.n_envs, 1) / dt)
+            history["train_reward"].append(win_reward / win_chunks)
+            history["ips"].append(win_steps / win_secs)
+            win_reward, win_chunks, win_steps, win_secs = 0.0, 0, 0, 0.0
     return ts, history
 
 
-def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
-               ) -> tuple[TrainState, dict[str, Any]]:
+def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
+               learner=None) -> tuple[TrainState, dict[str, Any]]:
     """Paper-faithful host loop with the Fig.-9 timing breakdown.
 
     Each timestep: host env step (CPU), device_put of the sampled batch
     (the PCIe import), then the jitted inference+update (the accelerator).
+
+    `learner` (optional) is a `train/learner.LearnerEngine` (or anything
+    with its `load_state`/`run_update`/`state` surface): when given, the
+    freshly initialized agent is installed into the engine and every
+    update streams through `learner.run_update(batch)` — bucket padding,
+    train-phase adaptive dispatch, and learner metrics included — instead
+    of the loop's own jitted `ddpg.update`.  The engine's update backend
+    is whatever its dispatcher picks; `dcfg.backend` still drives acting.
     """
     ts = init_train_state(env, cfg, dcfg)
     act_jit = jax.jit(partial(ddpg.act, cfg=dcfg))
     upd_jit = jax.jit(partial(ddpg.update, cfg=dcfg))
     sample_jit = jax.jit(partial(replay.sample, batch=dcfg.batch_size))
     add_jit = jax.jit(replay.add)
+    if learner is not None:
+        learner.load_state(ts.agent)
 
     times = {"env": 0.0, "runtime": 0.0, "accelerator": 0.0}
     key = ts.key
@@ -169,13 +188,25 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
         buf = add_jit(buf, obs, action, reward[None], next_obs[None],
                       done[None])
         batch = sample_jit(buf, k_sample)
-        batch = jax.device_put(batch)
+        if learner is None:
+            batch = jax.device_put(batch)
+        else:
+            # the learner's queue holds HOST arrays (its "PCIe import"
+            # happens inside run_update and is billed to the accelerator
+            # segment there) — pulling to host here, instead of a
+            # device_put the engine would immediately undo, keeps the
+            # timing breakdown honest and skips a wasted round trip
+            batch = jax.device_get(batch)
         jax.block_until_ready(batch)
         t3 = time.perf_counter()
 
         if int(buf.size) >= cfg.warmup_steps:
-            agent, _ = upd_jit(agent, batch)
-            jax.block_until_ready(agent.step)
+            if learner is not None:
+                learner.run_update(batch)        # blocks until applied
+                agent = learner.state
+            else:
+                agent, _ = upd_jit(agent, batch)
+                jax.block_until_ready(agent.step)
         t4 = time.perf_counter()
 
         times["accelerator"] += (t1 - t0) + (t4 - t3)
@@ -187,11 +218,15 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
     return ts, {"times": times, "total_steps": cfg.total_steps}
 
 
-def evaluate(env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array,
-             n_episodes: int = 10) -> Array:
-    """Paper protocol: average cumulative reward over `n_episodes` random
-    starts, accumulating until the agent falls (done) or the episode ends."""
-    @jax.jit
+@partial(jax.jit, static_argnames=("env", "dcfg"))
+def _eval_episodes(agent: ddpg.DDPGState, keys: Array, *, env,
+                   dcfg: ddpg.DDPGConfig) -> Array:
+    """Module-level jitted eval body — hoisted out of `evaluate` so repeat
+    eval calls hit the jit cache instead of re-tracing the full episode
+    scan (a closure-defined `@jax.jit` function is a fresh function object,
+    and therefore a fresh trace, on every call).  `env` and `dcfg` are
+    frozen dataclasses, hence hashable static keys; `agent` and `keys` are
+    traced, so evolving params never retrace."""
     def one_episode(k):
         state, obs = env.reset(k)
 
@@ -208,5 +243,12 @@ def evaluate(env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array,
             length=env.spec.episode_length)
         return total
 
-    keys = jax.random.split(key, n_episodes)
     return jnp.mean(jax.vmap(one_episode)(keys))
+
+
+def evaluate(env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array,
+             n_episodes: int = 10) -> Array:
+    """Paper protocol: average cumulative reward over `n_episodes` random
+    starts, accumulating until the agent falls (done) or the episode ends."""
+    keys = jax.random.split(key, n_episodes)
+    return _eval_episodes(agent, keys, env=env, dcfg=dcfg)

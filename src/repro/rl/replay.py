@@ -36,16 +36,27 @@ def init(capacity: int, obs_dim: int, act_dim: int) -> ReplayBuffer:
 
 
 def add(buf: ReplayBuffer, obs, action, reward, next_obs, done) -> ReplayBuffer:
-    """Add a batch of B transitions (B may be 1). Wraps modulo capacity."""
+    """Add a batch of B transitions (B may be 1). Wraps modulo capacity.
+
+    B > capacity is handled FIFO-correctly: only the trailing `cap` rows
+    can survive the ring, so the leading rows are dropped *before* the
+    scatter — `(ptr + arange(B)) % cap` would contain duplicate indices,
+    and `.at[idx].set` leaves the winner among duplicate writes
+    unspecified, i.e. the surviving rows would be arbitrary, not the
+    newest.  `ptr` still advances by the full B (mod cap), so the write
+    cursor lands exactly past the newest retained row.
+    """
     b = obs.shape[0]
     cap = buf.obs.shape[0]
-    idx = (buf.ptr + jnp.arange(b)) % cap
+    keep = min(b, cap)                       # static: shapes are concrete
+    tail = lambda x: x[b - keep:]            # newest `keep` rows win
+    idx = (buf.ptr + (b - keep) + jnp.arange(keep)) % cap
     return ReplayBuffer(
-        obs=buf.obs.at[idx].set(obs),
-        action=buf.action.at[idx].set(action),
-        reward=buf.reward.at[idx].set(reward),
-        next_obs=buf.next_obs.at[idx].set(next_obs),
-        done=buf.done.at[idx].set(done),
+        obs=buf.obs.at[idx].set(tail(obs)),
+        action=buf.action.at[idx].set(tail(action)),
+        reward=buf.reward.at[idx].set(tail(reward)),
+        next_obs=buf.next_obs.at[idx].set(tail(next_obs)),
+        done=buf.done.at[idx].set(tail(done)),
         ptr=(buf.ptr + b) % cap,
         size=jnp.minimum(buf.size + b, cap),
     )

@@ -68,8 +68,13 @@ class BatcherConfig:
 
     def __post_init__(self):
         object.__setattr__(self, "buckets", tuple(self.buckets))
-        if not self.buckets or tuple(sorted(self.buckets)) != self.buckets:
-            raise ValueError(f"buckets must be sorted+non-empty: {self.buckets}")
+        # strictly increasing: duplicates like (8, 8, 32) pass a plain
+        # sorted() check but would compile a redundant executable per
+        # (bucket, mode) — reject them too
+        if not self.buckets or self.buckets[0] < 1 or \
+                any(a >= b for a, b in zip(self.buckets, self.buckets[1:])):
+            raise ValueError("buckets must be a non-empty strictly "
+                             f"increasing tuple of sizes >= 1: {self.buckets}")
 
     @property
     def max_batch(self) -> int:
@@ -84,11 +89,19 @@ class BatcherConfig:
 
 
 class MicroBatcher:
-    """FIFO queue with deadline-or-full draining (see module docstring)."""
+    """FIFO queue with deadline-or-full draining (see module docstring).
+
+    The batching unit is abstract: `_rows(req)` says how many device-batch
+    rows one queued request occupies.  Here every request is a single
+    observation (one row); `train/learner`'s update batcher reuses this
+    queue machinery with multi-row requests (a whole replay batch or
+    trajectory chunk per request) by overriding `_rows` and `submit`.
+    """
 
     def __init__(self, config: BatcherConfig = BatcherConfig()):
         self.config = config
-        self._queue: deque[PendingRequest] = deque()
+        self._queue: deque = deque()
+        self._queued_rows = 0
         self._lock = threading.Lock()
         self._nonempty = threading.Condition(self._lock)
         self._closed = False
@@ -97,14 +110,23 @@ class MicroBatcher:
         with self._lock:
             return len(self._queue)
 
+    @staticmethod
+    def _rows(req) -> int:
+        """Device-batch rows one queued request occupies (1 here)."""
+        return 1
+
     def submit(self, obs) -> PolicyFuture:
         req = PendingRequest(obs=np.asarray(obs, np.float32),
                              future=PolicyFuture(),
                              t_submit=time.perf_counter())
+        return self._enqueue(req)
+
+    def _enqueue(self, req) -> PolicyFuture:
         with self._nonempty:
             if self._closed:
                 raise RuntimeError("batcher closed; engine stopped")
             self._queue.append(req)
+            self._queued_rows += self._rows(req)
             self._nonempty.notify()
         return req.future
 
@@ -122,6 +144,7 @@ class MicroBatcher:
         with self._lock:
             out = list(self._queue)
             self._queue.clear()
+            self._queued_rows = 0
             return out
 
     def reopen(self) -> None:
@@ -130,12 +153,14 @@ class MicroBatcher:
 
     def next_batch(self, timeout: Optional[float] = None
                    ) -> list[PendingRequest]:
-        """Block until a batch is ready, then drain up to `max_batch`.
+        """Block until a batch is ready, then drain up to `max_batch` rows.
 
-        Ready means: the queue holds `max_batch` requests, OR the oldest
-        request has aged past `max_wait_ms`.  Returns [] if `timeout`
-        elapses with an empty queue (lets the engine's serve loop poll its
-        stop flag).
+        Ready means: the queue holds `max_batch` rows, OR the oldest
+        request has aged past `max_wait_ms`.  Requests drain whole and in
+        FIFO order — a multi-row request that would overflow the cap stays
+        queued for the next drain (the head request always goes, so
+        progress is guaranteed).  Returns [] if `timeout` elapses with an
+        empty queue (lets the engine's serve loop poll its stop flag).
         """
         deadline = None if timeout is None else time.perf_counter() + timeout
         max_wait = self.config.max_wait_ms * 1e-3
@@ -143,10 +168,17 @@ class MicroBatcher:
             while True:
                 if self._queue:
                     age = time.perf_counter() - self._queue[0].t_submit
-                    if len(self._queue) >= self.config.max_batch \
+                    if self._queued_rows >= self.config.max_batch \
                             or age >= max_wait:
-                        n = min(len(self._queue), self.config.max_batch)
-                        return [self._queue.popleft() for _ in range(n)]
+                        out = [self._queue.popleft()]
+                        rows = self._rows(out[0])
+                        while self._queue and rows + self._rows(
+                                self._queue[0]) <= self.config.max_batch:
+                            req = self._queue.popleft()
+                            out.append(req)
+                            rows += self._rows(req)
+                        self._queued_rows -= rows
+                        return out
                     # wake when the oldest request hits the flush deadline
                     wait = max_wait - age
                 else:

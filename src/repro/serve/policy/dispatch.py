@@ -28,19 +28,35 @@ from measured `BENCH_fused_mlp.json` acting-path IPS — with the two-batch
 `actor_ips_by_batch` measurements it separates slope (per-item rate) from
 intercept (launch overhead), which is what `benchmarks/serve_bench` consumes
 on real hardware.
+
+The WHOLE CostModel API carries the phase axis: `estimate_us`, `choose`,
+and `launches` all take `phase="act" | "train"` (they used to hardcode the
+acting path even though `cost_hint` already modeled training — a train-time
+mode choice was silently costed as inference).  Train-phase coefficients
+live in `CostModel.train_costs`: empty by default (the act coefficients are
+reused against the train-phase launch/FLOP hints, which already encode the
+2-launch / ~3x-MAC custom-VJP shape), and fitted per mode by `from_bench`
+from the `BENCH_fused_mlp.json["train"]` section — two-point from
+`train.ips_by_batch` when present, single-point from `train.updates_per_s`
+otherwise.  `train/learner` dispatches its update streams through
+`choose(..., phase="train")` over `TRAIN_MODES` (the per-layer chain has no
+autodiff rule, so it never appears in a train-phase argmin).
 """
 from __future__ import annotations
 
 import dataclasses
 import json
 import pathlib
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.kernels._compat import mlp_flops as flops_per_item
 from repro.kernels.fxp_matmul.ops import chain_cost_hint
 from repro.kernels.fxp_mlp.ops import fused_cost_hint
 
 MODES = ("fused", "layer", "jnp")
+# the modes a train-phase dispatch may pick: the per-layer chain is
+# forward-only (no autodiff rule), so it never enters a train argmin
+TRAIN_MODES = ("fused", "jnp")
 
 # maps a DDPG backend name (BENCH_fused_mlp.json's actor_ips keys) to a mode
 BACKEND_TO_MODE = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp"}
@@ -88,9 +104,17 @@ DEFAULT_COSTS = {
 
 @dataclasses.dataclass
 class CostModel:
-    """Per-mode affine latency model + argmin chooser."""
+    """Per-(phase, mode) affine latency model + argmin chooser.
+
+    `costs` holds the act-phase coefficients; `train_costs` holds per-mode
+    train-phase overrides.  A mode missing from `train_costs` falls back to
+    its act coefficients — the phase-dependent launch/FLOP *hints* already
+    model the custom-VJP shape (2 launches, ~3x MACs), so the fallback is a
+    structural estimate rather than a phase-blind one.
+    """
 
     costs: dict[str, ModeCost]
+    train_costs: dict[str, ModeCost] = dataclasses.field(default_factory=dict)
     source: str = "default"
 
     @staticmethod
@@ -98,40 +122,93 @@ class CostModel:
         return CostModel(dict(DEFAULT_COSTS))
 
     @staticmethod
-    def launches(mode: str, dims: Sequence[int]) -> int:
-        return cost_hint(mode, dims)["launches"]
+    def launches(mode: str, dims: Sequence[int], phase: str = "act") -> int:
+        return cost_hint(mode, dims, phase)["launches"]
 
-    def estimate_us(self, mode: str, batch: int, dims: Sequence[int]) -> float:
-        c = self.costs[mode]
-        hint = cost_hint(mode, dims)
+    def coeffs(self, mode: str, phase: str = "act") -> ModeCost:
+        """The fitted coefficients serving a (mode, phase) estimate."""
+        if phase == "train" and mode in self.train_costs:
+            return self.train_costs[mode]
+        return self.costs[mode]
+
+    def estimate_us(self, mode: str, batch: int, dims: Sequence[int],
+                    phase: str = "act") -> float:
+        c = self.coeffs(mode, phase)
+        hint = cost_hint(mode, dims, phase)
         kflops = batch * hint["flops_per_item"] / 1e3
         return c.per_launch_us * hint["launches"] + c.us_per_kflop * kflops
 
     def choose(self, batch: int, dims: Sequence[int],
-               modes: Sequence[str] = MODES) -> str:
-        return min(modes, key=lambda m: self.estimate_us(m, batch, dims))
+               modes: Optional[Sequence[str]] = None,
+               phase: str = "act") -> str:
+        if modes is None:
+            modes = TRAIN_MODES if phase == "train" else MODES
+        return min(modes,
+                   key=lambda m: self.estimate_us(m, batch, dims, phase))
+
+    @staticmethod
+    def _fit_mode(mode: str, net: Sequence[int], phase: str,
+                  by_batch: dict, single_us: Optional[float],
+                  single_batch: int, base: ModeCost) -> Optional[ModeCost]:
+        """One (mode, phase) affine fit from measured throughput.
+
+        Preferred input: `by_batch` — {batch: items-per-second} at TWO (or
+        more) batch sizes.  Two measurements separate the slope from the
+        intercept of `t(B) = launches*per_launch + B*kflops*rate`: the
+        extreme-batch pair gives `slope = (t2-t1)/(B2-B1)` (the per-item
+        rate) and `intercept = t1 - slope*B1` (the launch overhead), so
+        BOTH coefficients are fitted instead of only the marginal rate.
+
+        Fallback: a single measured wall time `single_us` for a batch of
+        `single_batch` items — keep `base`'s launch overhead and back out
+        the marginal rate.  Returns None when nothing usable was measured.
+        """
+        hint = cost_hint(mode, net, phase)
+        kflops = hint["flops_per_item"] / 1e3
+
+        # ---- two-point fit: slope AND intercept ---------------------------
+        points = sorted((int(b), int(b) / float(v) * 1e6)
+                        for b, v in dict(by_batch).items() if float(v) > 0)
+        if len(points) >= 2 and points[0][0] != points[-1][0]:
+            (b1, t1), (b2, t2) = points[0], points[-1]
+            slope = (t2 - t1) / (b2 - b1)
+            intercept = t1 - slope * b1
+            if slope > 0 and intercept > 0:
+                return ModeCost(per_launch_us=intercept / hint["launches"],
+                                us_per_kflop=slope / kflops)
+            # degenerate fit (noise gave a negative coefficient): fall
+            # through to single-point
+
+        # ---- legacy single-point: rate only, `base` overheads -------------
+        if single_us is None or single_us <= 0:
+            return None
+        overhead = base.per_launch_us * hint["launches"]
+        marginal_us = max(single_us - overhead, 0.1 * single_us)
+        return ModeCost(base.per_launch_us,
+                        marginal_us / (single_batch * kflops))
 
     @staticmethod
     def from_bench(path, fallback_to_default: bool = True) -> "CostModel":
         """Recalibrate the affine cost model from `BENCH_fused_mlp.json`.
 
-        Preferred input: `actor_ips_by_batch` — acting-path IPS per backend
-        at TWO (or more) batch sizes.  Two measurements separate the slope
-        from the intercept of `t(B) = launches*per_launch + B*kflops*rate`:
-        the extreme-batch pair gives `slope = (t2-t1)/(B2-B1)` (the per-item
-        rate) and `intercept = t1 - slope*B1` (the launch overhead), so BOTH
-        coefficients are fitted instead of only the marginal rate.
+        Act phase: fits from `actor_ips_by_batch` (two-point, both
+        coefficients) or the legacy single-batch `actor_ips` (rate only,
+        default overheads) — see `_fit_mode`.
 
-        Fallback: legacy single-batch `actor_ips` — keep the default launch
-        overheads and back out each mode's marginal rate from
-        `B0/IPS = launches*overhead + B0*k*rate`.
+        Train phase: fits per-mode `train_costs` from the bench's `train`
+        section — two-point from `train.ips_by_batch` (trained-samples/sec
+        per batch size) when present, else single-point from
+        `train.updates_per_s` at `train.batch` (one update's wall time
+        against the train-phase launch/FLOP hint).
 
         Missing file / missing modes / degenerate fits keep their defaults
         (the model must stay total — the dispatcher cannot refuse to
-        answer).
+        answer; an unfitted train mode estimates through its act
+        coefficients and the train-phase hint).
         """
         path = pathlib.Path(path)
         costs = dict(DEFAULT_COSTS)
+        train_costs: dict[str, ModeCost] = {}
         if not path.exists():
             if not fallback_to_default:
                 raise FileNotFoundError(path)
@@ -147,39 +224,35 @@ class CostModel:
                 if mode is None:
                     continue
                 try:
-                    hint = cost_hint(mode, net)
-                    kflops = hint["flops_per_item"] / 1e3
-
-                    # ---- two-point fit: slope AND intercept ---------------
-                    points = sorted(
-                        (int(b), int(b) / float(v) * 1e6)
-                        for b, v in dict(by_batch.get(backend, {})).items()
-                        if float(v) > 0)
-                    if len(points) >= 2 and points[0][0] != points[-1][0]:
-                        (b1, t1), (b2, t2) = points[0], points[-1]
-                        slope = (t2 - t1) / (b2 - b1)
-                        intercept = t1 - slope * b1
-                        if slope > 0 and intercept > 0:
-                            costs[mode] = ModeCost(
-                                per_launch_us=intercept / hint["launches"],
-                                us_per_kflop=slope / kflops)
-                            continue
-                        # degenerate fit (noise gave a negative
-                        # coefficient): fall through to single-point
-
-                    # ---- legacy single-point: rate only, default overheads
                     ips = float(single.get(backend, 0.0))
-                    if ips <= 0:
-                        continue
-                    total_us = b0 / ips * 1e6
-                    overhead = costs[mode].per_launch_us * hint["launches"]
-                    marginal_us = max(total_us - overhead, 0.1 * total_us)
-                    costs[mode] = ModeCost(
-                        costs[mode].per_launch_us,
-                        marginal_us / (b0 * kflops))
+                    fit = CostModel._fit_mode(
+                        mode, net, "act", by_batch.get(backend, {}),
+                        b0 / ips * 1e6 if ips > 0 else None, b0,
+                        costs[mode])
+                    if fit is not None:
+                        costs[mode] = fit
                 except (ValueError, TypeError, KeyError, AttributeError):
                     # one malformed backend entry must not discard the
                     # other modes' fits — THIS mode keeps its default
+                    if not fallback_to_default:
+                        raise
+                    continue
+            train = data.get("train", {}) or {}
+            tb = int(train.get("batch", b0))
+            t_by_batch = train.get("ips_by_batch", {})
+            t_single = train.get("updates_per_s", {})
+            for backend in sorted({*t_single, *t_by_batch}):
+                mode = BACKEND_TO_MODE.get(backend)
+                if mode is None:
+                    continue
+                try:
+                    ups = float(t_single.get(backend, 0.0))
+                    fit = CostModel._fit_mode(
+                        mode, net, "train", t_by_batch.get(backend, {}),
+                        1e6 / ups if ups > 0 else None, tb, costs[mode])
+                    if fit is not None:
+                        train_costs[mode] = fit
+                except (ValueError, TypeError, KeyError, AttributeError):
                     if not fallback_to_default:
                         raise
                     continue
@@ -191,8 +264,8 @@ class CostModel:
                 raise
             return CostModel(dict(DEFAULT_COSTS),
                              source=f"default (unreadable bench: {err})")
-        return CostModel(costs, source=str(path))
+        return CostModel(costs, train_costs, source=str(path))
 
 
-__all__ = ["MODES", "ModeCost", "CostModel", "DEFAULT_COSTS",
+__all__ = ["MODES", "TRAIN_MODES", "ModeCost", "CostModel", "DEFAULT_COSTS",
            "cost_hint", "flops_per_item"]

@@ -1,0 +1,356 @@
+"""Batched learner engine (the tentpole of train/learner — see __init__).
+
+`LearnerEngine` owns one training state and streams update requests
+through it: coalesce → pad to bucket → train-phase adaptive dispatch →
+ONE `update_fn` call per micro-batch, applied sequentially.  Metrics cover
+the training-throughput story end to end: updates/sec, trained-samples/sec
+(train IPS, the Fig. 8 headline axis), p50/p99 request latency, batch
+occupancy, and the per-mode dispatch histogram — `benchmarks/learner_bench`
+lands them in `BENCH_learner.json`.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from functools import partial
+from typing import Any, Callable, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.rl import ddpg
+from repro.serve.policy.batcher import BatcherConfig
+from repro.serve.policy.dispatch import TRAIN_MODES, CostModel
+from repro.train.learner.batcher import (TRANSITION_KEYS, JoinedFuture,
+                                         UpdateBatcher, as_transition_batch,
+                                         concat_batches, merge_chunk_metrics)
+
+# dispatch mode -> the ddpg backend that can actually train through it
+# (the per-layer chain has no autodiff rule, hence no "layer" entry)
+TRAIN_BACKENDS = {"fused": "pallas", "jnp": "jnp"}
+
+# learner-shaped default buckets: update batches are replay-sized (tens to
+# hundreds of rows), never single observations
+DEFAULT_BUCKETS = (8, 32, 128)
+
+UpdateFn = Callable[[Any, dict], tuple[Any, dict]]
+
+
+class LearnerEngine:
+    """Streams batched updates through an adaptive train-phase dispatcher.
+
+    Synchronous use: `run_update(batch)` — one (or, for oversized batches,
+    a chunked sequence of) padded, dispatched, sequentially applied
+    update(s).  Threaded use: `start()`, then `submit(batch).result()`
+    from any number of producer threads; `stop()` to drain and join.
+
+    The engine is generic over the update family: `update_fns` maps each
+    dispatch mode to an `update_fn(state, batch) -> (new_state, metrics)`.
+    `from_ddpg` builds the DDPG family (fused custom-VJP / jnp autodiff);
+    `train/step.learner_update_fns` adapts the LM train step.
+
+    `pad_policy`:
+      * "mask"  — pad short batches to the bucket with zero rows plus a
+        zero-weight `batch["mask"]` (the `ddpg.update` weighted-loss
+        contract: pad rows contribute exactly zero gradient);
+      * "exact" — reject row counts that miss every bucket (for update
+        families without a mask contract, e.g. the LM step).
+    """
+
+    def __init__(self, state, update_fns: dict[str, UpdateFn], *,
+                 dims: Sequence[int],
+                 cost_model: Optional[CostModel] = None,
+                 batcher: Optional[BatcherConfig] = None,
+                 force_mode: Optional[str] = None,
+                 pad_policy: str = "mask",
+                 required_keys: Optional[Sequence[str]] = None,
+                 warmup_template: Optional[Callable[[int], dict]] = None):
+        self._state = state
+        self._update_fns = dict(update_fns)
+        self.modes = tuple(self._update_fns)
+        self.dims = list(dims)
+        self.cost_model = cost_model or CostModel.default()
+        self.batcher_config = batcher or BatcherConfig(buckets=DEFAULT_BUCKETS)
+        self.force_mode = force_mode
+        if force_mode is not None and force_mode not in self.modes:
+            raise ValueError(f"force_mode {force_mode!r} not in enabled "
+                             f"modes {self.modes}")
+        if pad_policy not in ("mask", "exact"):
+            raise ValueError(f"pad_policy {pad_policy!r}; 'mask' | 'exact'")
+        self.pad_policy = pad_policy
+        self.required_keys = required_keys
+        self.warmup_template = warmup_template
+        self._batcher = UpdateBatcher(self.batcher_config,
+                                      required_keys=required_keys)
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+        # one lock serializes state mutation (sync callers + drain thread):
+        # updates are sequential by construction
+        self._ulock = threading.Lock()
+        # ---- metrics (guarded by _mlock; same shape discipline as
+        # serve/policy: running totals + bounded latency window)
+        self._mlock = threading.Lock()
+        self._lat_window: deque[float] = deque(maxlen=100_000)
+        self._totals = {"requests": 0, "transitions": 0, "updates": 0,
+                        "device_s": 0.0, "occupancy_sum": 0.0}
+        self._mode_hist: dict[str, int] = {}
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+
+    @classmethod
+    def from_ddpg(cls, state: "ddpg.DDPGState", cfg: "ddpg.DDPGConfig",
+                  *, modes: Sequence[str] = TRAIN_MODES,
+                  **kwargs) -> "LearnerEngine":
+        """The DDPG learner: one jitted `ddpg.update` per trainable
+        dispatch mode (executables per bucket come from the jit cache, so
+        a bucket-sized stream and a direct call share the SAME program —
+        that is what makes streamed results bit-identical)."""
+        unknown = [m for m in modes if m not in TRAIN_BACKENDS]
+        if unknown:
+            raise ValueError(f"modes {unknown} cannot train; trainable "
+                             f"dispatch modes: {sorted(TRAIN_BACKENDS)}")
+        import dataclasses
+        fns = {m: jax.jit(partial(
+                   ddpg.update,
+                   cfg=dataclasses.replace(cfg, backend=TRAIN_BACKENDS[m])))
+               for m in modes}
+        n = len(ddpg.ACTOR_ACTS)
+        dims = [int(state.actor["l0"]["w"].shape[0])] + \
+               [int(state.actor[f"l{i}"]["w"].shape[1]) for i in range(n)]
+
+        def transitions(rows: int) -> dict:
+            return {"obs": np.zeros((rows, dims[0]), np.float32),
+                    "action": np.zeros((rows, dims[-1]), np.float32),
+                    "reward": np.zeros((rows,), np.float32),
+                    "next_obs": np.zeros((rows, dims[0]), np.float32),
+                    "done": np.zeros((rows,), bool)}
+
+        kwargs.setdefault("required_keys", TRANSITION_KEYS)
+        kwargs.setdefault("warmup_template", transitions)
+        return cls(state, fns, dims=dims, **kwargs)
+
+    # ------------------------------------------------------------------ #
+    # state
+    # ------------------------------------------------------------------ #
+
+    @property
+    def state(self):
+        return self._state
+
+    def load_state(self, state) -> None:
+        """Install a (fresh or checkpointed) training state; subsequent
+        updates stream onto it."""
+        with self._ulock:
+            self._state = state
+
+    # ------------------------------------------------------------------ #
+    # dispatch + device call
+    # ------------------------------------------------------------------ #
+
+    def choose_mode(self, bucket: int) -> str:
+        if self.force_mode is not None:
+            return self.force_mode
+        return self.cost_model.choose(bucket, self.dims, self.modes,
+                                      phase="train")
+
+    def _pad(self, batch: dict[str, np.ndarray], rows: int,
+             bucket: int) -> dict[str, np.ndarray]:
+        """Pad `rows` transitions up to `bucket` (zero rows + zero-weight
+        mask).  Exact fits pass through untouched — no mask key, so the
+        program is byte-for-byte the direct-call executable."""
+        if rows == bucket:
+            return batch
+        if self.pad_policy == "exact":
+            raise ValueError(
+                f"pad_policy='exact': batch of {rows} rows must hit a "
+                f"bucket exactly ({self.batcher_config.buckets})")
+        pad = bucket - rows
+        out = {k: np.concatenate(
+                   [v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+               for k, v in batch.items()}
+        out["mask"] = np.concatenate(
+            [np.ones(rows, np.float32), np.zeros(pad, np.float32)])
+        return out
+
+    def warmup(self, buckets: Optional[Sequence[int]] = None,
+               modes: Optional[Sequence[str]] = None,
+               padded: bool = False) -> int:
+        """Lower + compile the (bucket, mode) update executables ahead of
+        traffic without advancing the training state.  `padded=True` also
+        warms the masked variants (bucket-1 rows).  Returns the number of
+        executables warmed.
+
+        Dummy batches come from the engine's `warmup_template` (a
+        `rows -> batch` callable; `from_ddpg` installs the DDPG transition
+        shape).  Generic engines must pass one at construction to warm up.
+        """
+        if self.warmup_template is None:
+            raise RuntimeError(
+                "no warmup_template: this engine's update family has no "
+                "known batch shape — pass warmup_template=rows->batch at "
+                "construction (from_ddpg installs the DDPG one)")
+        n = 0
+        for bucket in buckets or self.batcher_config.buckets:
+            rows_list = [bucket] + ([bucket - 1] if padded and bucket > 1
+                                    else [])
+            for mode in modes or ([self.force_mode] if self.force_mode
+                                  else self.modes):
+                for rows in rows_list:
+                    batch = self._pad(self.warmup_template(rows), rows,
+                                      bucket)
+                    with self._ulock:
+                        jax.block_until_ready(
+                            self._update_fns[mode](self._state, batch))
+                    n += 1
+        return n
+
+    def _apply(self, batch: dict[str, np.ndarray], rows: int
+               ) -> dict[str, float]:
+        """One micro-batch through the dispatcher and onto the state."""
+        bucket = self.batcher_config.bucket_for(rows)
+        mode = self.choose_mode(bucket)
+        padded = self._pad(batch, rows, bucket)
+        with self._ulock:
+            t0 = time.perf_counter()
+            new_state, metrics = self._update_fns[mode](self._state, padded)
+            jax.block_until_ready((new_state, metrics))
+            device_s = time.perf_counter() - t0
+            self._state = new_state
+        with self._mlock:
+            self._totals["transitions"] += rows
+            self._totals["updates"] += 1
+            self._totals["device_s"] += device_s
+            self._totals["occupancy_sum"] += rows / bucket
+            self._mode_hist[mode] = self._mode_hist.get(mode, 0) + 1
+        out = {k: float(v) for k, v in metrics.items()}
+        out["mode"] = mode
+        return out
+
+    def _chunks(self, arrs: dict[str, np.ndarray], rows: int):
+        """Top-bucket-sized (chunk, rows) slices of an oversized request
+        — key-agnostic (the update family defines the batch schema)."""
+        cap = self.batcher_config.max_batch
+        for lo in range(0, rows, cap):
+            yield ({k: v[lo:lo + cap] for k, v in arrs.items()},
+                   min(cap, rows - lo))
+
+    def run_update(self, batch) -> dict[str, float]:
+        """Synchronously stream one update request: chunk to the top
+        bucket if oversized, pad, dispatch, apply sequentially.  Returns
+        the update metrics (row-weighted means across chunks)."""
+        arrs, rows = as_transition_batch(batch, self.required_keys)
+        if rows <= self.batcher_config.max_batch:
+            return self._apply(arrs, rows)
+        return merge_chunk_metrics([(self._apply(part, n), n)
+                                    for part, n in self._chunks(arrs, rows)])
+
+    # ------------------------------------------------------------------ #
+    # threaded streaming
+    # ------------------------------------------------------------------ #
+
+    def submit(self, batch):
+        """Enqueue one update request (replay batch or trajectory chunk);
+        resolve via `.result()` to the update metrics.  Oversized requests
+        split into top-bucket chunks behind one aggregate future."""
+        if self._thread is None:
+            raise RuntimeError(
+                "learner not streaming; call start() first (or use "
+                "run_update for synchronous updates)")
+        with self._mlock:
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+        arrs, rows = as_transition_batch(batch, self.required_keys)
+        if rows <= self.batcher_config.max_batch:
+            return self._batcher.submit(arrs)
+        return JoinedFuture([(self._batcher.submit(part), n)
+                             for part, n in self._chunks(arrs, rows)])
+
+    def start(self) -> "LearnerEngine":
+        if self._thread is not None:
+            raise RuntimeError("learner already started")
+        self._stop.clear()
+        self._batcher.reopen()
+        self._thread = threading.Thread(target=self._serve_loop,
+                                        name="learner", daemon=True)
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop accepting requests, apply what's queued, join the loop
+        (close-before-drain, exactly the serve/policy shutdown shape)."""
+        if self._thread is None:
+            return
+        self._batcher.close()
+        while len(self._batcher):
+            time.sleep(0.005)
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+        for r in self._batcher.drain():
+            r.future.set_exception(
+                RuntimeError("learner stopped before applying this update"))
+
+    def _serve_loop(self) -> None:
+        while not self._stop.is_set():
+            reqs = self._batcher.next_batch(timeout=0.02)
+            if not reqs:
+                continue
+            try:
+                rows = sum(r.rows for r in reqs)
+                metrics = self._apply(
+                    concat_batches([r.batch for r in reqs]), rows)
+            except BaseException as err:  # noqa: BLE001 — relay to callers
+                for r in reqs:
+                    r.future.set_exception(err)
+                continue
+            t_done = time.perf_counter()
+            for r in reqs:
+                # coalesced requests share one update: metrics are joint
+                r.future.set_result(dict(metrics, rows=r.rows))
+            with self._mlock:
+                self._t_last = t_done
+                self._totals["requests"] += len(reqs)
+                self._lat_window.extend(t_done - r.t_submit for r in reqs)
+
+    # ------------------------------------------------------------------ #
+    # metrics
+    # ------------------------------------------------------------------ #
+
+    def stats(self) -> dict:
+        """Training-throughput metrics so far (totals exact over the
+        engine lifetime; latency percentiles over the recent window)."""
+        with self._mlock:
+            lat = np.asarray(self._lat_window, np.float64)
+            t = dict(self._totals)
+            hist = dict(self._mode_hist)
+            wall = (self._t_last - self._t_first
+                    if self._t_first is not None and self._t_last is not None
+                    else None)
+        return {
+            "requests": t["requests"],
+            "updates": t["updates"],
+            "transitions": t["transitions"],
+            "updates_per_s_device": (t["updates"] / t["device_s"]
+                                     if t["device_s"] > 0 else None),
+            "updates_per_s_wall": (t["updates"] / wall if wall else None),
+            "train_ips_device": (t["transitions"] / t["device_s"]
+                                 if t["device_s"] > 0 else None),
+            "train_ips_wall": (t["transitions"] / wall if wall else None),
+            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
+            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
+            "batch_occupancy": (t["occupancy_sum"] / t["updates"]
+                                if t["updates"] else None),
+            "mode_histogram": hist,
+            "cost_model": self.cost_model.source,
+        }
+
+    def reset_stats(self) -> None:
+        with self._mlock:
+            self._lat_window.clear()
+            self._totals = {k: type(v)() for k, v in self._totals.items()}
+            self._mode_hist = {}
+            self._t_first = self._t_last = None
+
+
+__all__ = ["LearnerEngine", "TRAIN_BACKENDS", "DEFAULT_BUCKETS"]

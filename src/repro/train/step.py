@@ -102,3 +102,18 @@ def make_train_step(cfg: ModelConfig, opt_cfg: adam.AdamConfig, *,
                           step=state.step + 1), metrics
 
     return train_step
+
+
+def learner_update_fns(cfg: ModelConfig, opt_cfg: adam.AdamConfig,
+                       **kwargs) -> dict:
+    """The LM train step in `train/learner.LearnerEngine`'s update-family
+    contract: {mode: update_fn(state, batch) -> (state, metrics)}.
+
+    The LM step has one trainable path (XLA autodiff), so the family is the
+    single "jnp" mode — dispatch degenerates to a pass-through, but the
+    engine's queueing/coalescing/metrics machinery applies unchanged.  LM
+    batches carry no per-row loss mask, so pair this with
+    `LearnerEngine(pad_policy="exact")` and buckets matching the batch
+    shapes (`kwargs` forward to `make_train_step`).
+    """
+    return {"jnp": jax.jit(make_train_step(cfg, opt_cfg, **kwargs))}

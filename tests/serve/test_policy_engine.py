@@ -312,6 +312,12 @@ def test_bucket_rounding():
     assert BatcherConfig(buckets=[1, 8, 32]).buckets == (1, 8, 32)  # list ok
     with pytest.raises(ValueError):
         BatcherConfig(buckets=(8, 1))
+    # duplicates pass a plain sorted() check but would compile a redundant
+    # executable per (bucket, mode) — rejected
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BatcherConfig(buckets=(8, 8, 32))
+    with pytest.raises(ValueError, match="strictly increasing"):
+        BatcherConfig(buckets=(0, 8))
 
 
 def test_close_rejects_submits_but_keeps_queue_for_draining():

@@ -25,7 +25,8 @@ def _load(name):
 
 
 @pytest.mark.parametrize("name", ["BENCH_fused_mlp.json",
-                                  "BENCH_serve_policy.json"])
+                                  "BENCH_serve_policy.json",
+                                  "BENCH_learner.json"])
 def test_checked_in_artifacts_validate(name):
     path = REPO / name
     assert path.exists(), f"{name} missing at repo root"
@@ -45,17 +46,20 @@ def test_fused_mlp_drift_fails():
         lambda d: d.pop("train"),                       # section dropped
         lambda d: d.pop("actor_ips_by_batch"),          # calib input dropped
         lambda d: d["train"].pop("updates_per_s"),      # key renamed away
+        lambda d: d["train"].pop("ips_by_batch"),       # train fit input
+        lambda d: d["train"]["ips_by_batch"].update(
+            pallas={"128": 1.0}),                       # one batch only
         lambda d: d["config"].update(net="17-400-300-6"),   # type drift
         lambda d: d["actor_ips_by_batch"].update(
             jnp={"256": 1.0}),                          # one batch only
-        lambda d: d.update(schema="fixar/fused_mlp_bench/v1"),  # old tag
+        lambda d: d.update(schema="fixar/fused_mlp_bench/v2"),  # old tag
     ):
         bad = copy.deepcopy(good)
         mutate(bad)
         with pytest.raises(bench_schema.SchemaError):
             bench_schema.validate_report(
                 bad, bench_schema.FUSED_MLP_SCHEMA
-                if bad.get("schema") != "fixar/fused_mlp_bench/v2"
+                if bad.get("schema") != "fixar/fused_mlp_bench/v3"
                 else None)
 
 
@@ -67,6 +71,27 @@ def test_serve_policy_drift_fails():
         lambda d: d["modes"].pop("fused"),
         lambda d: d["modes"]["jnp"].pop("ips_big"),
         lambda d: d["adaptive"].pop("mode_histogram"),
+    ):
+        bad = copy.deepcopy(good)
+        mutate(bad)
+        with pytest.raises(bench_schema.SchemaError):
+            bench_schema.validate_report(bad)
+
+
+def test_learner_drift_fails():
+    """The learner artifact's contract: per-mode training throughput, BOTH
+    per-phase dispatch tables, and the phase-keyed mode histogram."""
+    good = _load("BENCH_learner.json")
+    bench_schema.validate_report(good)
+    for mutate in (
+        lambda d: d.pop("modes"),
+        lambda d: d["modes"].pop("fused"),
+        lambda d: d["modes"]["jnp"].pop("train_ips"),
+        lambda d: d["dispatch"].pop("train"),           # phase axis dropped
+        lambda d: d["dispatch"].pop("act"),
+        lambda d: d["adaptive"].pop("train_ips_wall"),
+        lambda d: d["adaptive"]["mode_histogram"].pop("train"),
+        lambda d: d["config"].update(buckets=[8, 32]),  # < 3 buckets
     ):
         bad = copy.deepcopy(good)
         mutate(bad)

@@ -1,0 +1,123 @@
+"""rl/loop — retrace regression, history windowing, learner streaming.
+
+Pins the PR-5 satellite fixes: `evaluate` must not re-trace its episode
+scan on every call (the jit is hoisted to module level with env/dcfg as
+static keys), `train_fused` history must describe the whole eval window
+(not just the boundary chunk), and `train_host` optionally streams its
+updates through a `train/learner.LearnerEngine`.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl import ddpg, loop
+from repro.rl.envs.base import EnvSpec, EnvState
+from repro.rl.envs.locomotion import make
+from repro.serve.policy import BatcherConfig
+from repro.train.learner import LearnerEngine
+
+
+# --------------------------------------------------------------------- #
+# evaluate: hoisted jit, no per-call retrace
+# --------------------------------------------------------------------- #
+
+def test_evaluate_does_not_retrace_across_calls():
+    """The bug: a closure-defined `@jax.jit one_episode` is a fresh
+    function object — and a fresh full-episode trace/compile — on every
+    eval call.  Hoisted, repeat calls must hit the jit cache."""
+    if not hasattr(loop._eval_episodes, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    env = make("pendulum")
+    dcfg = ddpg.DDPGConfig(qat_enabled=False)
+    agent = ddpg.init(jax.random.key(0), env.spec, dcfg)
+    before = loop._eval_episodes._cache_size()
+    r1 = loop.evaluate(env, agent, dcfg, jax.random.key(1), n_episodes=2)
+    after_first = loop._eval_episodes._cache_size()
+    assert after_first == before + 1
+    # different key, different agent VALUES (same shapes): cache hit
+    agent2 = dataclasses.replace(
+        agent, step=agent.step + 1,
+        actor=jax.tree.map(lambda x: x + 0.01, agent.actor))
+    r2 = loop.evaluate(env, agent2, dcfg, jax.random.key(2), n_episodes=2)
+    r3 = loop.evaluate(env, agent, dcfg, jax.random.key(3), n_episodes=2)
+    assert loop._eval_episodes._cache_size() == after_first
+    assert np.isfinite(float(r1) + float(r2) + float(r3))
+
+
+def test_evaluate_matches_paper_protocol_shape():
+    env = make("pendulum")
+    dcfg = ddpg.DDPGConfig(qat_enabled=False)
+    agent = ddpg.init(jax.random.key(0), env.spec, dcfg)
+    r = loop.evaluate(env, agent, dcfg, jax.random.key(1), n_episodes=3)
+    assert r.shape == () and np.isfinite(float(r))
+
+
+# --------------------------------------------------------------------- #
+# train_fused: history covers the whole eval window
+# --------------------------------------------------------------------- #
+
+@dataclasses.dataclass(frozen=True)
+class _CountingEnv:
+    """Deterministic stub: reward at step t is exactly t, never done —
+    makes the eval-window mean analytically checkable."""
+
+    spec: EnvSpec = EnvSpec("counting", obs_dim=3, act_dim=2,
+                            episode_length=10 ** 6)
+
+    def reset(self, key):
+        state = EnvState(q=jnp.zeros(1), qd=jnp.zeros(1),
+                         t=jnp.zeros((), jnp.int32), key=key)
+        return state, jnp.zeros(3, jnp.float32)
+
+    def step(self, s, action):
+        ns = EnvState(q=s.q, qd=s.qd, t=s.t + 1, key=s.key)
+        return (ns, jnp.zeros(3, jnp.float32),
+                s.t.astype(jnp.float32), jnp.zeros((), jnp.bool_))
+
+
+def test_train_fused_history_accumulates_across_eval_window(monkeypatch):
+    """eval_every = 2 chunks of 3 steps: rewards are t = 0..5, so the
+    window mean is 2.5 — the old code recorded only the boundary chunk's
+    mean (4.0)."""
+    monkeypatch.setattr(loop, "evaluate",
+                        lambda *a, **k: jnp.float32(0.0))
+    env = _CountingEnv()
+    cfg = loop.LoopConfig(total_steps=12, eval_every=6,
+                          warmup_steps=10 ** 6, replay_capacity=32,
+                          eval_episodes=1)
+    dcfg = ddpg.DDPGConfig(qat_enabled=False, batch_size=4)
+    _, history = loop.train_fused(env, cfg, dcfg, chunk=3)
+    assert history["step"] == [6, 12]
+    # window 1: chunks cover t=0..2 (mean 1.0) and t=3..5 (mean 4.0)
+    np.testing.assert_allclose(history["train_reward"][0], 2.5, rtol=1e-6)
+    # window 2: t=6..8 (mean 7.0) and t=9..11 (mean 10.0)
+    np.testing.assert_allclose(history["train_reward"][1], 8.5, rtol=1e-6)
+    # ips covers the window's steps over the window's wall time
+    assert all(v > 0 for v in history["ips"])
+
+
+# --------------------------------------------------------------------- #
+# train_host: optional learner streaming
+# --------------------------------------------------------------------- #
+
+def test_train_host_streams_updates_through_learner():
+    env = make("pendulum")
+    cfg = loop.LoopConfig(total_steps=6, warmup_steps=2,
+                          replay_capacity=32, eval_every=10 ** 6)
+    dcfg = ddpg.DDPGConfig(qat_enabled=False, batch_size=8)
+    seed_state = ddpg.init(jax.random.key(0), env.spec, dcfg)
+    learner = LearnerEngine.from_ddpg(
+        seed_state, dcfg, force_mode="jnp",
+        batcher=BatcherConfig(buckets=(8, 16)))
+    ts, info = loop.train_host(env, cfg, dcfg, learner=learner)
+    # every post-warmup step streamed one update through the engine
+    st = learner.stats()
+    assert st["updates"] == int(ts.agent.step) > 0
+    assert st["transitions"] == st["updates"] * dcfg.batch_size
+    assert st["mode_histogram"] == {"jnp": st["updates"]}
+    # the loop's final agent IS the engine's state (one source of truth)
+    assert ts.agent is learner.state
+    assert info["times"]["accelerator"] > 0

@@ -88,3 +88,48 @@ def test_sample_from_empty_buffer_is_safe():
     batch = replay.sample(buf, jax.random.key(0), 4)
     assert batch["obs"].shape == (4, 2)
     assert bool((np.asarray(batch["obs"]) == 0.0).all())
+
+
+def test_overflow_batch_keeps_newest_transitions():
+    """One `add` with B > capacity: `(ptr + arange(B)) % cap` holds
+    duplicate indices, and `.at[idx].set` leaves the winner among duplicate
+    writes UNSPECIFIED — the fix drops the doomed leading rows before the
+    scatter so the newest `cap` transitions deterministically win, with
+    ptr/size accounted as if all B were written then wrapped."""
+    cap = 4
+    buf = replay.init(cap, 1, 1)
+    # pre-fill two slots so the overflow also exercises a nonzero ptr
+    pre = jnp.full((2, 1), -1.0)
+    buf = replay.add(buf, pre, pre, jnp.zeros((2,)), pre,
+                     jnp.zeros((2,), jnp.bool_))
+    big = jnp.arange(10.0, 16.0)[:, None]          # 6 rows into cap=4
+    buf = replay.add(buf, big, big + 100, jnp.arange(6.0), big + 200,
+                     jnp.ones((6,), jnp.bool_))
+    assert int(buf.size) == cap
+    assert int(buf.ptr) == (2 + 6) % cap == 0
+    # the newest 4 rows (12..15) must occupy slots (ptr+2+arange(4))%4 =
+    # [0, 1, 2, 3] shifted by the dropped rows: start = 2 + (6-4) = 4 -> 0
+    obs = np.asarray(buf.obs).ravel()
+    np.testing.assert_array_equal(obs, [12.0, 13.0, 14.0, 15.0])
+    # all fields wrap in lockstep
+    np.testing.assert_array_equal(np.asarray(buf.action).ravel(),
+                                  [112.0, 113.0, 114.0, 115.0])
+    np.testing.assert_array_equal(np.asarray(buf.reward),
+                                  [2.0, 3.0, 4.0, 5.0])
+    np.testing.assert_array_equal(np.asarray(buf.next_obs).ravel(),
+                                  [212.0, 213.0, 214.0, 215.0])
+    assert bool(np.asarray(buf.done).all())
+
+
+def test_overflow_batch_exact_multiple_of_capacity():
+    """B == 2*cap: the last cap rows land exactly where ptr arithmetic
+    says, and a jitted add agrees with the eager one."""
+    cap = 3
+    buf = replay.init(cap, 1, 1)
+    big = jnp.arange(6.0)[:, None]
+    add_jit = jax.jit(replay.add)
+    buf = add_jit(buf, big, big, jnp.arange(6.0), big,
+                  jnp.zeros((6,), jnp.bool_))
+    assert int(buf.ptr) == 0 and int(buf.size) == cap
+    np.testing.assert_array_equal(np.asarray(buf.obs).ravel(),
+                                  [3.0, 4.0, 5.0])
