@@ -72,7 +72,9 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
         SMOKE_DIR / FUSED_JSON.name if smoke else FUSED_JSON)
 
     report = {
-        "schema": "fixar/learner_bench/v1",
+        # v2: adaptive carries dispatch_audit + qat_telemetry (the
+        # engine's registry-backed stats sections)
+        "schema": "fixar/learner_bench/v2",
         "config": {"net": dims, "buckets": list(buckets), "big_batch": big,
                    "quick": quick, "smoke": smoke,
                    "backend": jax.default_backend(),
@@ -131,9 +133,14 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
          ";".join(f"b{b}={d['train'][str(b)]}" for b in DISPATCH_BATCHES))
 
     # ---- adaptive end-to-end: concurrent producers through the queue ------
+    # traced + audited: registry-backed stats, predicted-vs-measured
+    # audit per update, QAT range/saturation probes off the live state
+    from repro.obs import Observability
+    obsb = Observability.tracing(qat_probe_every=2)
     eng = LearnerEngine.from_ddpg(
         state, cfg, cost_model=cm,
-        batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0))
+        batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0),
+        obs=obsb)
     eng.warmup(padded=True)
     eng.load_state(state)
     eng.reset_stats()
@@ -156,6 +163,10 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
     for t in threads:
         t.join()
     eng.stop()
+    # one explicit range+saturation probe so qat_telemetry is populated
+    # even on runs too short for the qat_probe_every cadence to fire
+    eng.record_qat_telemetry(
+        _replay_batch(rng, buckets[0], dims[0], dims[-1]))
     st = eng.stats()
     report["adaptive"] = {
         "requests": st["requests"],
@@ -166,18 +177,30 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
         "p50_ms": st["p50_ms"],
         "p99_ms": st["p99_ms"],
         "batch_occupancy": st["batch_occupancy"],
-        "mode_histogram": {"train": st["mode_histogram"]},
+        "mode_histogram": st["mode_histogram"],   # already phase-keyed
+        "dispatch_audit": st["dispatch_audit"],
+        "qat_telemetry": st["qat_telemetry"],
     }
     emit("train/learner/adaptive", 0.0,
          f"requests={st['requests']};updates={st['updates']};"
          f"train_ips_wall={st['train_ips_wall']:.0f};"
          f"p50_ms={st['p50_ms']:.2f};p99_ms={st['p99_ms']:.2f};"
          f"occupancy={st['batch_occupancy']:.2f}")
+    drift = st["dispatch_audit"]["drift_factor"]
+    emit("train/learner/dispatch_audit", 0.0,
+         f"drift_factor={drift:.2f};stale={st['dispatch_audit']['stale']};"
+         f"batches={st['dispatch_audit']['batches']}")
 
     target = SMOKE_DIR / LEARNER_JSON.name if smoke else LEARNER_JSON
     target.parent.mkdir(parents=True, exist_ok=True)
     target.write_text(json.dumps(report, indent=2) + "\n")
+    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
+        / "trace_learner.jsonl"
+    trace_path.parent.mkdir(parents=True, exist_ok=True)
+    trace = obsb.tracer.write(trace_path)
     emit("train/learner/json", 0.0, f"wrote={target.relative_to(_REPO)}")
+    emit("train/learner/trace", 0.0,
+         f"wrote={pathlib.Path(trace).relative_to(_REPO)}")
     return report
 
 

@@ -101,12 +101,39 @@ FUSED_MLP_SCHEMA = {
     },
 }
 
+# the two observability sections every adaptive engine run now reports
+# (engine.stats()["dispatch_audit"] / ["qat_telemetry"]): the audit must
+# carry the drift verdict + the per-(phase, mode, bucket) table; the QAT
+# telemetry is a per-site map ({} when QAT is off).  drift_factor is None
+# until a batch was recorded, so only presence is required.
+_DISPATCH_AUDIT = {
+    "type": "object",
+    "required": ["drift_factor", "stale", "threshold", "batches", "table"],
+    "properties": {
+        "stale": {"type": "boolean"},
+        "threshold": _NUM,
+        "batches": {"type": "integer"},
+        "table": {"type": "object"},
+    },
+}
+
+_QAT_TELEMETRY = {
+    "type": "object",
+    "additionalProperties": {
+        "type": "object",
+        "required": ["a_min", "a_max"],
+    },
+}
+
 SERVE_POLICY_SCHEMA = {
     "$schema": "http://json-schema.org/draft-07/schema#",
     "type": "object",
     "required": ["schema", "config", "modes", "dispatch", "adaptive"],
     "properties": {
-        "schema": {"const": "fixar/serve_policy_bench/v2"},
+        # v3: adaptive grows dispatch_audit + qat_telemetry, and
+        # mode_histogram is phase-keyed ({"act": {mode: n}}) to match the
+        # learner's shape
+        "schema": {"const": "fixar/serve_policy_bench/v3"},
         "config": {
             "type": "object",
             "required": ["net", "big_batch", "backend", "qat"],
@@ -133,7 +160,20 @@ SERVE_POLICY_SCHEMA = {
         "adaptive": {
             "type": "object",
             "required": ["requests", "ips_wall", "p50_ms", "p99_ms",
-                         "batch_occupancy", "mode_histogram"],
+                         "batch_occupancy", "mode_histogram",
+                         "dispatch_audit", "qat_telemetry"],
+            "properties": {
+                "mode_histogram": {     # per-phase: {"act": {mode: n}}
+                    "type": "object",
+                    "required": ["act"],
+                    "additionalProperties": {
+                        "type": "object",
+                        "additionalProperties": {"type": "integer"},
+                    },
+                },
+                "dispatch_audit": _DISPATCH_AUDIT,
+                "qat_telemetry": _QAT_TELEMETRY,
+            },
         },
     },
 }
@@ -146,7 +186,9 @@ LEARNER_SCHEMA = {
     "type": "object",
     "required": ["schema", "config", "modes", "dispatch", "adaptive"],
     "properties": {
-        "schema": {"const": "fixar/learner_bench/v1"},
+        # v2: adaptive grows dispatch_audit + qat_telemetry (engine stats
+        # sections; the mode histogram was already phase-keyed)
+        "schema": {"const": "fixar/learner_bench/v2"},
         "config": {
             "type": "object",
             "required": ["net", "buckets", "big_batch", "backend", "qat"],
@@ -183,7 +225,8 @@ LEARNER_SCHEMA = {
             "type": "object",
             "required": ["requests", "updates", "transitions",
                          "updates_per_s_wall", "train_ips_wall", "p50_ms",
-                         "p99_ms", "batch_occupancy", "mode_histogram"],
+                         "p99_ms", "batch_occupancy", "mode_histogram",
+                         "dispatch_audit", "qat_telemetry"],
             "properties": {
                 "mode_histogram": {       # per-phase: {"train": {mode: n}}
                     "type": "object",
@@ -193,6 +236,8 @@ LEARNER_SCHEMA = {
                         "additionalProperties": {"type": "integer"},
                     },
                 },
+                "dispatch_audit": _DISPATCH_AUDIT,
+                "qat_telemetry": _QAT_TELEMETRY,
             },
         },
     },
@@ -200,8 +245,8 @@ LEARNER_SCHEMA = {
 
 SCHEMAS_BY_TAG = {
     "fixar/fused_mlp_bench/v3": FUSED_MLP_SCHEMA,
-    "fixar/serve_policy_bench/v2": SERVE_POLICY_SCHEMA,
-    "fixar/learner_bench/v1": LEARNER_SCHEMA,
+    "fixar/serve_policy_bench/v3": SERVE_POLICY_SCHEMA,
+    "fixar/learner_bench/v2": LEARNER_SCHEMA,
 }
 
 

@@ -6,7 +6,11 @@ FPGA never had to expose — request p50/p99 latency, batch occupancy, and the
 adaptive dispatcher's mode choices per batch size.
 
 Writes `BENCH_serve_policy.json` at the repo root (tracked across PRs, like
-BENCH_fused_mlp.json) and emits the harness CSV lines.
+BENCH_fused_mlp.json) and emits the harness CSV lines.  The adaptive run
+executes with tracing enabled and drops a Chrome trace-event JSONL
+(`results/bench/trace_serve.jsonl`, Perfetto-openable) next to the
+registry-backed stats; its JSON carries the dispatch predicted-vs-measured
+audit and the per-site QAT saturation telemetry.
 """
 import json
 import pathlib
@@ -52,7 +56,9 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
     obs_big = rng.standard_normal((big, dims[0])).astype(np.float32)
 
     report = {
-        "schema": "fixar/serve_policy_bench/v2",  # v2: ips_b512 -> ips_big
+        # v3: adaptive carries dispatch_audit + qat_telemetry, and its
+        # mode_histogram is phase-keyed ({"act": {mode: n}})
+        "schema": "fixar/serve_policy_bench/v3",
         "config": {"net": dims, "big_batch": big, "quick": quick,
                    "smoke": smoke, "backend": jax.default_backend(),
                    "qat": "frozen_quantized"},
@@ -110,8 +116,13 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
         "adaptive dispatcher must pick different modes for batch 1 vs 512"
 
     # ---- adaptive end-to-end: concurrent clients through the queue --------
+    # traced + audited: the registry backs stats(), every batch feeds the
+    # predicted-vs-measured audit, and the QAT probe samples saturation
+    from repro.obs import Observability
+    obsb = Observability.tracing(qat_probe_every=2)
     eng = PolicyEngine.from_ddpg(
-        state, batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0))
+        state, batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0),
+        obs=obsb)
     eng.warmup(buckets=(8, 32), modes=("layer",))
     eng.warmup(buckets=tuple(b for b in (128, big) if b in buckets),
                modes=("fused",))
@@ -132,6 +143,9 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
     for t in threads:
         t.join()
     eng.stop()
+    # one explicit probe so qat_telemetry is populated even on runs too
+    # short for the qat_probe_every cadence to fire
+    eng.record_qat_telemetry(obs_big[:buckets[1]], rows=buckets[1])
     st = eng.stats()
     report["adaptive"] = {
         "requests": st["requests"],
@@ -140,16 +154,28 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
         "p99_ms": st["p99_ms"],
         "batch_occupancy": st["batch_occupancy"],
         "mode_histogram": st["mode_histogram"],
+        "dispatch_audit": st["dispatch_audit"],
+        "qat_telemetry": st["qat_telemetry"],
     }
     emit("serve/policy/adaptive", 0.0,
          f"requests={st['requests']};ips_wall={st['ips_wall']:.0f};"
          f"p50_ms={st['p50_ms']:.2f};p99_ms={st['p99_ms']:.2f};"
          f"occupancy={st['batch_occupancy']:.2f}")
+    drift = st["dispatch_audit"]["drift_factor"]
+    emit("serve/policy/dispatch_audit", 0.0,
+         f"drift_factor={drift:.2f};stale={st['dispatch_audit']['stale']};"
+         f"batches={st['dispatch_audit']['batches']}")
 
     target = SMOKE_DIR / SERVE_JSON.name if smoke else SERVE_JSON
     target.parent.mkdir(parents=True, exist_ok=True)
     target.write_text(json.dumps(report, indent=2) + "\n")
+    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
+        / "trace_serve.jsonl"
+    trace_path.parent.mkdir(parents=True, exist_ok=True)
+    trace = obsb.tracer.write(trace_path)
     emit("serve/policy/json", 0.0, f"wrote={target.relative_to(_REPO)}")
+    emit("serve/policy/trace", 0.0,
+         f"wrote={pathlib.Path(trace).relative_to(_REPO)}")
     return report
 
 

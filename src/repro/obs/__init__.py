@@ -1,0 +1,63 @@
+"""repro.obs — the process-wide observability subsystem.
+
+Three layers, wired through both engines and the RL loop:
+
+  1. **Metrics registry** (`obs/metrics`): thread-safe counters, gauges,
+     and O(1)-memory log-bucket streaming histograms with mergeable
+     p50/p99 — the shared store replacing the per-engine hand-rolled
+     totals/deque bookkeeping (`obs/engine.EngineMetrics` is the common
+     engine surface).
+  2. **Span tracing** (`obs/trace`): zero-overhead-when-disabled spans
+     over the request lifecycle, exported as Chrome trace-event JSONL
+     (opens in Perfetto).
+  3. **Domain telemetry**: QAT range/saturation snapshots (`obs/qat`) and
+     the dispatch predicted-vs-measured audit with its calibration-drift
+     flag (`obs/audit`).
+
+`Observability` is the bundle the engines take: a registry (always live —
+metrics are how `stats()` is computed), a tracer (disabled by default),
+the audit staleness threshold, and the QAT probe cadence.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.obs.audit import DispatchAudit
+from repro.obs.engine import EngineMetrics
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.qat import QATTelemetry, ranges_snapshot
+from repro.obs.trace import NULL_TRACER, Tracer, read_jsonl
+
+
+@dataclasses.dataclass
+class Observability:
+    """Per-engine observability configuration + shared sinks.
+
+    * `registry` — the metrics store; pass one instance to several
+      engines (and `runtime/ft.HeartbeatRegistry`) to get a single
+      process-wide export surface.  Defaults to a fresh private registry.
+    * `tracer` — span sink; defaults to the shared disabled tracer
+      (`NULL_TRACER`), which makes every span site a no-op.
+    * `audit_threshold` — drift factor above which the dispatch audit
+      flags the cost model stale (see `obs/audit.DispatchAudit`).
+    * `qat_probe_every` — run the QAT activation-saturation probe every
+      N engine calls (0 = only when `record_qat_telemetry` is called
+      explicitly).  The probe is one extra jitted forward per sampled
+      batch, so keep N >> 1 under load.
+    """
+
+    registry: MetricsRegistry = dataclasses.field(
+        default_factory=MetricsRegistry)
+    tracer: Tracer = dataclasses.field(default_factory=lambda: NULL_TRACER)
+    audit_threshold: float = 3.0
+    qat_probe_every: int = 0
+
+    @classmethod
+    def tracing(cls, **kwargs) -> "Observability":
+        """An enabled-tracer bundle (convenience for examples/benches)."""
+        return cls(tracer=Tracer(), **kwargs)
+
+
+__all__ = ["Observability", "MetricsRegistry", "Counter", "Gauge",
+           "Histogram", "EngineMetrics", "Tracer", "NULL_TRACER",
+           "read_jsonl", "DispatchAudit", "QATTelemetry", "ranges_snapshot"]

@@ -252,6 +252,52 @@ def act_batch(actor: Params, obs: Array,
     return jnp.clip(y, -1.0, 1.0)
 
 
+def actor_site_telemetry(actor: Params, obs: Array,
+                         frozen: Optional[FrozenQuant] = None,
+                         mask: Optional[Array] = None
+                         ) -> tuple[Array, Array, Array]:
+    """Per-site activation extrema + quantizer saturation rates (obs hook).
+
+    Runs the actor's jnp reference forward and captures, at each QAT site,
+    the pre-quantization input extrema and the fraction of elements at or
+    beyond the site's clip boundaries ``[a_min, a_max]`` — the
+    paper-grounded overflow signal `repro.obs.qat` aggregates: a site whose
+    saturation climbs is a layer whose captured range no longer covers its
+    activations at the current bitwidth.  Saturation is 0 when `frozen` is
+    None or not in the quantized phase (nothing clips there).
+
+    `mask` is an optional (B,) row-validity vector so engines can probe
+    their *padded* bucket batches (one trace per bucket, not per row
+    count): masked-out rows are excluded from extrema and saturation.
+
+    Returns ``(mins, maxs, saturations)``, each ``(n_sites,)`` f32.
+    """
+    valid = None if mask is None else (mask > 0)[:, None]
+    x = obs
+    mns, mxs, sats = [], [], []
+    for i, act_name in enumerate(ACTOR_ACTS):
+        x_lo = x if valid is None else jnp.where(valid, x, jnp.inf)
+        x_hi = x if valid is None else jnp.where(valid, x, -jnp.inf)
+        mns.append(jnp.min(x_lo))
+        mxs.append(jnp.max(x_hi))
+        if frozen is not None and frozen.quantized:
+            out = ((x <= frozen.a_mins[i]) |
+                   (x >= frozen.a_maxs[i])).astype(jnp.float32)
+            if valid is None:
+                sats.append(jnp.mean(out))
+            else:
+                w = valid.astype(jnp.float32)
+                sats.append(jnp.sum(out * w) /
+                            jnp.maximum(jnp.sum(w) * x.shape[-1], 1.0))
+        else:
+            sats.append(jnp.float32(0.0))
+        if frozen is not None:
+            x = frozen.site(i, x)
+        x = _dense(x, actor[f"l{i}"], act_name, backend="jnp",
+                   quant_phase=None)
+    return jnp.stack(mns), jnp.stack(mxs), jnp.stack(sats)
+
+
 def _wmean(x: Array, w: Optional[Array]) -> Array:
     """Mean over valid rows: plain `jnp.mean` when `w` is None (the
     unweighted path is kept verbatim so existing update programs are

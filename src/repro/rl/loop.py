@@ -146,7 +146,8 @@ def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
 
 
 def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
-               learner=None) -> tuple[TrainState, dict[str, Any]]:
+               learner=None, tracer=None
+               ) -> tuple[TrainState, dict[str, Any]]:
     """Paper-faithful host loop with the Fig.-9 timing breakdown.
 
     Each timestep: host env step (CPU), device_put of the sampled batch
@@ -159,6 +160,11 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
     train-phase adaptive dispatch, and learner metrics included — instead
     of the loop's own jitted `ddpg.update`.  The engine's update backend
     is whatever its dispatcher picks; `dcfg.backend` still drives acting.
+
+    `tracer` (optional) is an `obs.Tracer`: when enabled, every timestep
+    emits its Fig.-9 segments as spans (`loop.act` / `loop.env` /
+    `loop.replay` / `loop.update`) — layered over a learner's own engine
+    spans, this is the full host-loop picture in one Perfetto timeline.
     """
     ts = init_train_state(env, cfg, dcfg)
     act_jit = jax.jit(partial(ddpg.act, cfg=dcfg))
@@ -212,6 +218,13 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
         times["accelerator"] += (t1 - t0) + (t4 - t3)
         times["env"] += t2 - t1
         times["runtime"] += t3 - t2
+        if tracer is not None and tracer.enabled:
+            tracer.complete("loop.act", t0, t1, cat="loop", step=step)
+            tracer.complete("loop.env", t1, t2, cat="loop", step=step)
+            tracer.complete("loop.replay", t2, t3, cat="loop", step=step)
+            if t4 > t3:
+                tracer.complete("loop.update", t3, t4, cat="loop",
+                                step=step)
         obs = next_obs[None]
 
     ts = TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, key=key)

@@ -33,11 +33,33 @@ class HostState:
 
 
 class HeartbeatRegistry:
+    """Per-host liveness + step-time tracking.
+
+    `metrics` (optional) is an `obs.metrics.MetricsRegistry` — the same
+    process-wide registry the engines use (`obs/metrics` is stdlib-only,
+    so the control plane can depend on it).  When given, every beat
+    mirrors into it under ``<prefix>.*``: a per-host ``last_beat`` gauge
+    and ``beats`` counter, one step-time histogram across hosts, and
+    counters for detected stragglers and removed (failed) hosts — the
+    fleet-health section of a registry snapshot.
+    """
+
     def __init__(self, n_hosts: int, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
+                 clock: Callable[[], float] = time.monotonic, *,
+                 metrics=None, prefix: str = "ft"):
         self.hosts = {i: HostState(i) for i in range(n_hosts)}
         self.timeout_s = timeout_s
         self.clock = clock
+        self._metrics = metrics
+        self._prefix = prefix
+        if metrics is not None:
+            # step times run seconds-scale: the default histogram layout
+            # (1e-7 .. 1e4 s) covers μs-fast sim hosts to hours-stuck ones
+            self._m_step = metrics.histogram(f"{prefix}.step_time_s")
+            self._m_stragglers = metrics.counter(f"{prefix}.stragglers")
+            self._m_failures = metrics.counter(f"{prefix}.failures")
+            self._m_alive = metrics.gauge(f"{prefix}.hosts_alive")
+            self._m_alive.set(len(self.hosts))
 
     def beat(self, host_id: int, step_time_s: Optional[float] = None):
         h = self.hosts[host_id]
@@ -46,6 +68,12 @@ class HeartbeatRegistry:
         if step_time_s is not None:
             m = 0.9 if h.step_time_ema else 0.0
             h.step_time_ema = m * h.step_time_ema + (1 - m) * step_time_s
+        if self._metrics is not None:
+            p = f"{self._prefix}.host{host_id}"
+            self._metrics.gauge(f"{p}.last_beat").set(h.last_beat)
+            self._metrics.counter(f"{p}.beats").inc()
+            if step_time_s is not None:
+                self._m_step.observe(step_time_s)
 
     def detect_failures(self) -> list[int]:
         now = self.clock()
@@ -58,12 +86,19 @@ class HeartbeatRegistry:
         if not times:
             return []
         median = times[len(times) // 2]
-        return [i for i, h in self.hosts.items()
-                if h.step_time_ema > threshold * median]
+        out = [i for i, h in self.hosts.items()
+               if h.step_time_ema > threshold * median]
+        if self._metrics is not None and out:
+            self._m_stragglers.inc(len(out))
+        return out
 
     def remove(self, host_ids: list[int]):
         for i in host_ids:
-            self.hosts.pop(i, None)
+            if self.hosts.pop(i, None) is not None \
+                    and self._metrics is not None:
+                self._m_failures.inc()
+        if self._metrics is not None:
+            self._m_alive.set(len(self.hosts))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -126,8 +161,10 @@ class TrainingSupervisor:
 
     def __init__(self, n_hosts: int, devices_per_host: int,
                  model_parallel: int = 16, timeout_s: float = 60.0,
-                 clock: Callable[[], float] = time.monotonic):
-        self.registry = HeartbeatRegistry(n_hosts, timeout_s, clock)
+                 clock: Callable[[], float] = time.monotonic, *,
+                 metrics=None):
+        self.registry = HeartbeatRegistry(n_hosts, timeout_s, clock,
+                                          metrics=metrics)
         self.devices_per_host = devices_per_host
         self.model_parallel = model_parallel
         self.events: list[dict] = []

@@ -98,13 +98,23 @@ class MicroBatcher:
     trajectory chunk per request) by overriding `_rows` and `submit`.
     """
 
-    def __init__(self, config: BatcherConfig = BatcherConfig()):
+    def __init__(self, config: BatcherConfig = BatcherConfig(), *,
+                 registry=None, prefix: str = "batcher"):
         self.config = config
         self._queue: deque = deque()
         self._queued_rows = 0
         self._lock = threading.Lock()
         self._nonempty = threading.Condition(self._lock)
         self._closed = False
+        # optional queue telemetry (an obs.metrics.MetricsRegistry): submit
+        # counter, queue-depth gauge, and the per-request queue-wait
+        # histogram.  None (the default) keeps the queue metrics-free.
+        if registry is not None:
+            self._m_submitted = registry.counter(f"{prefix}.submitted")
+            self._m_depth = registry.gauge(f"{prefix}.queue_depth")
+            self._m_wait = registry.histogram(f"{prefix}.queue_wait_s")
+        else:
+            self._m_submitted = self._m_depth = self._m_wait = None
 
     def __len__(self) -> int:
         with self._lock:
@@ -127,7 +137,11 @@ class MicroBatcher:
                 raise RuntimeError("batcher closed; engine stopped")
             self._queue.append(req)
             self._queued_rows += self._rows(req)
+            depth = len(self._queue)
             self._nonempty.notify()
+        if self._m_submitted is not None:
+            self._m_submitted.inc()
+            self._m_depth.set(depth)
         return req.future
 
     def close(self) -> None:
@@ -178,6 +192,11 @@ class MicroBatcher:
                             out.append(req)
                             rows += self._rows(req)
                         self._queued_rows -= rows
+                        if self._m_wait is not None:
+                            now = time.perf_counter()
+                            for r in out:
+                                self._m_wait.observe(now - r.t_submit)
+                            self._m_depth.set(len(self._queue))
                         return out
                     # wake when the oldest request hits the flush deadline
                     wait = max_wait - age

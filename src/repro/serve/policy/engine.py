@@ -17,17 +17,24 @@ Request lifecycle::
 The engine is frozen-QAT by construction: it holds only the actor params
 and a `core.qat.FrozenQuant` snapshot — there is no `QATState` anywhere on
 the serve path, so no range-monitor write can happen (QuaRL/QForce-RL's
-"deploy the quantized policy" framing).  Metrics cover the throughput story
-end to end: IPS, p50/p99 request latency, batch occupancy, and a dispatch-
-mode histogram (the Fig. 8-comparable numbers land in
-`BENCH_serve_policy.json` via benchmarks/serve_bench).
+"deploy the quantized policy" framing).
+
+Observability runs through `repro.obs` (pass an `Observability` bundle):
+metrics land in the shared registry (IPS, p50/p99 request latency via the
+streaming histogram, batch occupancy, phase-keyed dispatch-mode histogram
+— the Fig. 8-comparable numbers land in `BENCH_serve_policy.json` via
+benchmarks/serve_bench); every batch feeds the dispatch predicted-vs-
+measured audit; an enabled tracer gets the full request lifecycle
+(enqueue → coalesce → dispatch → launch → block_until_ready → reply) as
+Chrome trace events; and `record_qat_telemetry` (or the
+`qat_probe_every` cadence) probes per-site activation saturation against
+the frozen quantization ranges.
 """
 from __future__ import annotations
 
 import functools
 import threading
 import time
-from collections import deque
 from typing import Any, Optional, Sequence
 
 import jax
@@ -35,6 +42,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.obs import (DispatchAudit, EngineMetrics, Observability,
+                       QATTelemetry)
 from repro.rl import ddpg
 from repro.serve.policy.batcher import BatcherConfig, MicroBatcher, PolicyFuture
 from repro.serve.policy.dispatch import MODES, CostModel
@@ -57,7 +66,8 @@ class PolicyEngine:
                  batcher: BatcherConfig = BatcherConfig(),
                  modes: Sequence[str] = MODES,
                  force_mode: Optional[str] = None,
-                 mesh=None):
+                 mesh=None,
+                 obs: Optional[Observability] = None):
         self.actor = actor
         self.frozen = frozen
         self.cost_model = cost_model or CostModel.default()
@@ -76,19 +86,23 @@ class PolicyEngine:
         self._fns = {mode: jax.jit(functools.partial(ddpg.act_batch,
                                                      mode=mode))
                      for mode in self.modes}
-        self._batcher = MicroBatcher(batcher)
+        # ---- observability: every stat lives in the shared registry
+        # (stats() is a view over it); the audit checks the cost model's
+        # predictions against measured wall time; the tracer is a no-op
+        # unless the caller passed an enabled one
+        self.obs = obs if obs is not None else Observability()
+        self._metrics = EngineMetrics(self.obs.registry, prefix="serve",
+                                      phase="act", items_name="actions",
+                                      calls_name="batches")
+        self._audit = DispatchAudit(self.cost_model, self.dims,
+                                    threshold=self.obs.audit_threshold)
+        self._qat = QATTelemetry(self.obs.registry, prefix="serve.qat")
+        self._qat_probe_fn = None
+        self._qat_ranges_recorded = False
+        self._batcher = MicroBatcher(batcher, registry=self.obs.registry,
+                                     prefix="serve.batcher")
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
-        # ---- metrics (guarded by _mlock): running totals for the unbounded
-        # aggregates, a bounded window for the latency percentiles — stats()
-        # stays O(window), memory stays flat at millions-of-requests scale
-        self._mlock = threading.Lock()
-        self._lat_window: deque[float] = deque(maxlen=100_000)
-        self._totals = {"requests": 0, "actions": 0, "batches": 0,
-                        "device_s": 0.0, "occupancy_sum": 0.0}
-        self._mode_hist: dict[str, int] = {}
-        self._t_first: Optional[float] = None
-        self._t_last: Optional[float] = None
 
     @classmethod
     def from_ddpg(cls, state: "ddpg.DDPGState", **kwargs) -> "PolicyEngine":
@@ -139,19 +153,25 @@ class PolicyEngine:
         if n > cap:
             return np.concatenate([self.run_batch(obs[i:i + cap])
                                    for i in range(0, n, cap)])
+        tracer = self.obs.tracer
         bucket = self.batcher_config.bucket_for(n)
-        mode = self.choose_mode(bucket)
+        with tracer.span("serve.dispatch", bucket=bucket, rows=n) as sp:
+            mode = self.choose_mode(bucket)
+            sp.set(mode=mode)
         x = np.zeros((bucket, self.dims[0]), np.float32)
         x[:n] = obs
         t0 = time.perf_counter()
-        y = jax.block_until_ready(self._call(x, mode))
+        with tracer.span("serve.launch", bucket=bucket, mode=mode):
+            y = self._call(x, mode)
+        with tracer.span("serve.block_until_ready", bucket=bucket,
+                         mode=mode):
+            y = jax.block_until_ready(y)
         device_s = time.perf_counter() - t0
-        with self._mlock:
-            self._totals["actions"] += n
-            self._totals["batches"] += 1
-            self._totals["device_s"] += device_s
-            self._totals["occupancy_sum"] += n / bucket
-            self._mode_hist[mode] = self._mode_hist.get(mode, 0) + 1
+        self._audit.record("act", mode, bucket, device_s)
+        self._metrics.record_call(n, bucket, mode, device_s)
+        every = self.obs.qat_probe_every
+        if every and self._metrics.calls % every == 0:
+            self.record_qat_telemetry(x, rows=n)
         return np.asarray(y[:n])
 
     # ------------------------------------------------------------------ #
@@ -166,9 +186,7 @@ class PolicyEngine:
             raise RuntimeError(
                 "engine not serving; call start() first (or use run_batch "
                 "for synchronous batches)")
-        with self._mlock:
-            if self._t_first is None:
-                self._t_first = time.perf_counter()
+        self._metrics.mark_submit()
         return self._batcher.submit(obs)
 
     def start(self) -> "PolicyEngine":
@@ -201,59 +219,102 @@ class PolicyEngine:
                              "request"))
 
     def _serve_loop(self) -> None:
+        tracer = self.obs.tracer
         while not self._stop.is_set():
+            t_poll = time.perf_counter() if tracer.enabled else 0.0
             reqs = self._batcher.next_batch(timeout=0.02)
             if not reqs:
                 continue
+            if tracer.enabled:
+                # only record the coalesce window when a batch actually
+                # drained — idle polls would otherwise spam the trace
+                tracer.complete("serve.coalesce", t_poll,
+                                time.perf_counter(), cat="batcher",
+                                requests=len(reqs))
             try:
                 acts = self.run_batch(np.stack([r.obs for r in reqs]))
             except BaseException as err:  # noqa: BLE001 — relay to callers
                 for r in reqs:
                     r.future.set_exception(err)
                 continue
-            t_done = time.perf_counter()
-            for r, a in zip(reqs, acts):
-                r.future.set_result(a)
-            with self._mlock:
-                self._t_last = t_done
-                self._totals["requests"] += len(reqs)
-                self._lat_window.extend(t_done - r.t_submit for r in reqs)
+            with tracer.span("serve.reply", requests=len(reqs)):
+                t_done = time.perf_counter()
+                for r, a in zip(reqs, acts):
+                    r.future.set_result(a)
+            if tracer.enabled:
+                for r in reqs:
+                    tracer.complete("serve.request", r.t_submit, t_done,
+                                    cat="request")
+            self._metrics.record_replies(
+                len(reqs), (t_done - r.t_submit for r in reqs), t_done)
+
+    # ------------------------------------------------------------------ #
+    # telemetry
+    # ------------------------------------------------------------------ #
+
+    def record_qat_telemetry(self, obs, rows: Optional[int] = None) -> dict:
+        """Probe per-site activation ranges + saturation on one (possibly
+        padded) observation batch and fold them into the registry.
+
+        `rows` masks out padding rows (a bucket-padded batch's zero rows
+        would otherwise drag act_min to 0 and dilute the saturation rate).
+        The probe is one extra jitted forward per call — it retraces per
+        bucket shape, which the engine's fixed bucket set bounds.  Returns
+        the per-site `qat_telemetry` stats view.
+        """
+        if not self._qat_ranges_recorded and self.frozen is not None \
+                and self.frozen.quantized:
+            for i in range(len(self.frozen.a_mins)):
+                self._qat.record_range(f"act{i}",
+                                       float(self.frozen.a_mins[i]),
+                                       float(self.frozen.a_maxs[i]))
+            self._qat_ranges_recorded = True
+        if self._qat_probe_fn is None:
+            self._qat_probe_fn = jax.jit(ddpg.actor_site_telemetry)
+        x = np.asarray(obs, np.float32)
+        mask = None
+        if rows is not None and rows < x.shape[0]:
+            mask = np.zeros((x.shape[0],), np.float32)
+            mask[:rows] = 1.0
+        mns, mxs, sats = jax.block_until_ready(
+            self._qat_probe_fn(self.actor, jnp.asarray(x), self.frozen,
+                               mask if mask is None else jnp.asarray(mask)))
+        mns, mxs, sats = np.asarray(mns), np.asarray(mxs), np.asarray(sats)
+        for i in range(mns.shape[0]):
+            self._qat.record_probe(f"act{i}", float(mns[i]), float(mxs[i]),
+                                   float(sats[i]))
+        return self._qat.stats()
 
     # ------------------------------------------------------------------ #
     # metrics
     # ------------------------------------------------------------------ #
 
     def stats(self) -> dict:
-        """Serving metrics so far: totals are exact over the engine's
-        lifetime; latency percentiles cover the most recent window."""
-        with self._mlock:
-            lat = np.asarray(self._lat_window, np.float64)
-            t = dict(self._totals)
-            hist = dict(self._mode_hist)
-            wall = (self._t_last - self._t_first
-                    if self._t_first is not None and self._t_last is not None
-                    else None)
+        """Serving metrics so far, read off the shared registry: exact
+        lifetime totals, streaming-histogram latency quantiles, the
+        phase-keyed dispatch histogram, and the two audit sections."""
+        m = self._metrics
+        device_s = m.device_s
+        wall = m.wall_s()
         return {
-            "requests": t["requests"],
-            "actions": t["actions"],
-            "batches": t["batches"],
-            "ips_device": (t["actions"] / t["device_s"]
-                           if t["device_s"] > 0 else None),
-            "ips_wall": (t["requests"] / wall if wall else None),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
-            "batch_occupancy": (t["occupancy_sum"] / t["batches"]
-                                if t["batches"] else None),
-            "mode_histogram": hist,
+            "requests": m.requests,
+            "actions": m.items,
+            "batches": m.calls,
+            "ips_device": m.items / device_s if device_s > 0 else None,
+            "ips_wall": (m.requests / wall if wall else None),
+            "p50_ms": m.latency_ms(0.50),
+            "p99_ms": m.latency_ms(0.99),
+            "batch_occupancy": m.occupancy(),
+            "mode_histogram": m.mode_histogram(),
             "cost_model": self.cost_model.source,
+            "dispatch_audit": self._audit.snapshot(),
+            "qat_telemetry": self._qat.stats(),
         }
 
     def reset_stats(self) -> None:
-        with self._mlock:
-            self._lat_window.clear()
-            self._totals = {k: type(v)() for k, v in self._totals.items()}
-            self._mode_hist = {}
-            self._t_first = self._t_last = None
+        self._metrics.reset()
+        self._audit.reset()
+        self._qat.reset()
 
 
 __all__ = ["PolicyEngine"]

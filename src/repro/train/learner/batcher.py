@@ -108,8 +108,10 @@ class UpdateBatcher(MicroBatcher):
     """
 
     def __init__(self, config: Optional[BatcherConfig] = None, *,
-                 required_keys: Optional[Sequence[str]] = None):
-        super().__init__(config or BatcherConfig())
+                 required_keys: Optional[Sequence[str]] = None,
+                 registry=None, prefix: str = "batcher"):
+        super().__init__(config or BatcherConfig(), registry=registry,
+                         prefix=prefix)
         self.required_keys = required_keys
 
     @staticmethod

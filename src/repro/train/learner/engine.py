@@ -2,23 +2,31 @@
 
 `LearnerEngine` owns one training state and streams update requests
 through it: coalesce → pad to bucket → train-phase adaptive dispatch →
-ONE `update_fn` call per micro-batch, applied sequentially.  Metrics cover
-the training-throughput story end to end: updates/sec, trained-samples/sec
-(train IPS, the Fig. 8 headline axis), p50/p99 request latency, batch
-occupancy, and the per-mode dispatch histogram — `benchmarks/learner_bench`
-lands them in `BENCH_learner.json`.
+ONE `update_fn` call per micro-batch, applied sequentially.
+
+Observability runs through `repro.obs` (pass an `Observability` bundle):
+the shared registry carries the training-throughput story end to end —
+updates/sec, trained-samples/sec (train IPS, the Fig. 8 headline axis),
+p50/p99 request latency via the streaming histogram, batch occupancy, the
+phase-keyed dispatch histogram — plus the dispatch predicted-vs-measured
+audit and the per-site QAT range/saturation telemetry pulled straight off
+the live `QATState` between updates (`benchmarks/learner_bench` lands it
+all in `BENCH_learner.json`).  An enabled tracer gets per-update spans
+(dispatch → launch → block_until_ready).
 """
 from __future__ import annotations
 
 import threading
 import time
-from collections import deque
 from functools import partial
 from typing import Any, Callable, Optional, Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import (DispatchAudit, EngineMetrics, Observability,
+                       QATTelemetry)
 from repro.rl import ddpg
 from repro.serve.policy.batcher import BatcherConfig
 from repro.serve.policy.dispatch import TRAIN_MODES, CostModel
@@ -65,7 +73,8 @@ class LearnerEngine:
                  force_mode: Optional[str] = None,
                  pad_policy: str = "mask",
                  required_keys: Optional[Sequence[str]] = None,
-                 warmup_template: Optional[Callable[[int], dict]] = None):
+                 warmup_template: Optional[Callable[[int], dict]] = None,
+                 obs: Optional[Observability] = None):
         self._state = state
         self._update_fns = dict(update_fns)
         self.modes = tuple(self._update_fns)
@@ -81,22 +90,25 @@ class LearnerEngine:
         self.pad_policy = pad_policy
         self.required_keys = required_keys
         self.warmup_template = warmup_template
+        # ---- observability: same subsystem as serve/policy — shared
+        # registry (stats() is a view over it), dispatch audit, tracer
+        self.obs = obs if obs is not None else Observability()
+        self._metrics = EngineMetrics(self.obs.registry, prefix="learner",
+                                      phase="train",
+                                      items_name="transitions",
+                                      calls_name="updates")
+        self._audit = DispatchAudit(self.cost_model, self.dims,
+                                    threshold=self.obs.audit_threshold)
+        self._qat = QATTelemetry(self.obs.registry, prefix="learner.qat")
         self._batcher = UpdateBatcher(self.batcher_config,
-                                      required_keys=required_keys)
+                                      required_keys=required_keys,
+                                      registry=self.obs.registry,
+                                      prefix="learner.batcher")
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
         # one lock serializes state mutation (sync callers + drain thread):
         # updates are sequential by construction
         self._ulock = threading.Lock()
-        # ---- metrics (guarded by _mlock; same shape discipline as
-        # serve/policy: running totals + bounded latency window)
-        self._mlock = threading.Lock()
-        self._lat_window: deque[float] = deque(maxlen=100_000)
-        self._totals = {"requests": 0, "transitions": 0, "updates": 0,
-                        "device_s": 0.0, "occupancy_sum": 0.0}
-        self._mode_hist: dict[str, int] = {}
-        self._t_first: Optional[float] = None
-        self._t_last: Optional[float] = None
 
     @classmethod
     def from_ddpg(cls, state: "ddpg.DDPGState", cfg: "ddpg.DDPGConfig",
@@ -208,21 +220,27 @@ class LearnerEngine:
     def _apply(self, batch: dict[str, np.ndarray], rows: int
                ) -> dict[str, float]:
         """One micro-batch through the dispatcher and onto the state."""
+        tracer = self.obs.tracer
         bucket = self.batcher_config.bucket_for(rows)
-        mode = self.choose_mode(bucket)
+        with tracer.span("learner.dispatch", bucket=bucket, rows=rows) as sp:
+            mode = self.choose_mode(bucket)
+            sp.set(mode=mode)
         padded = self._pad(batch, rows, bucket)
         with self._ulock:
             t0 = time.perf_counter()
-            new_state, metrics = self._update_fns[mode](self._state, padded)
-            jax.block_until_ready((new_state, metrics))
+            with tracer.span("learner.launch", bucket=bucket, mode=mode):
+                new_state, metrics = self._update_fns[mode](self._state,
+                                                            padded)
+            with tracer.span("learner.block_until_ready", bucket=bucket,
+                             mode=mode):
+                jax.block_until_ready((new_state, metrics))
             device_s = time.perf_counter() - t0
             self._state = new_state
-        with self._mlock:
-            self._totals["transitions"] += rows
-            self._totals["updates"] += 1
-            self._totals["device_s"] += device_s
-            self._totals["occupancy_sum"] += rows / bucket
-            self._mode_hist[mode] = self._mode_hist.get(mode, 0) + 1
+        self._audit.record("train", mode, bucket, device_s)
+        self._metrics.record_call(rows, bucket, mode, device_s)
+        every = self.obs.qat_probe_every
+        if every and self._metrics.calls % every == 0:
+            self.record_qat_telemetry(batch)
         out = {k: float(v) for k, v in metrics.items()}
         out["mode"] = mode
         return out
@@ -257,9 +275,7 @@ class LearnerEngine:
             raise RuntimeError(
                 "learner not streaming; call start() first (or use "
                 "run_update for synchronous updates)")
-        with self._mlock:
-            if self._t_first is None:
-                self._t_first = time.perf_counter()
+        self._metrics.mark_submit()
         arrs, rows = as_transition_batch(batch, self.required_keys)
         if rows <= self.batcher_config.max_batch:
             return self._batcher.submit(arrs)
@@ -292,10 +308,16 @@ class LearnerEngine:
                 RuntimeError("learner stopped before applying this update"))
 
     def _serve_loop(self) -> None:
+        tracer = self.obs.tracer
         while not self._stop.is_set():
+            t_poll = time.perf_counter() if tracer.enabled else 0.0
             reqs = self._batcher.next_batch(timeout=0.02)
             if not reqs:
                 continue
+            if tracer.enabled:
+                tracer.complete("learner.coalesce", t_poll,
+                                time.perf_counter(), cat="batcher",
+                                requests=len(reqs))
             try:
                 rows = sum(r.rows for r in reqs)
                 metrics = self._apply(
@@ -304,53 +326,83 @@ class LearnerEngine:
                 for r in reqs:
                     r.future.set_exception(err)
                 continue
-            t_done = time.perf_counter()
-            for r in reqs:
-                # coalesced requests share one update: metrics are joint
-                r.future.set_result(dict(metrics, rows=r.rows))
-            with self._mlock:
-                self._t_last = t_done
-                self._totals["requests"] += len(reqs)
-                self._lat_window.extend(t_done - r.t_submit for r in reqs)
+            with tracer.span("learner.reply", requests=len(reqs)):
+                t_done = time.perf_counter()
+                for r in reqs:
+                    # coalesced requests share one update: metrics are joint
+                    r.future.set_result(dict(metrics, rows=r.rows))
+            if tracer.enabled:
+                for r in reqs:
+                    tracer.complete("learner.request", r.t_submit, t_done,
+                                    cat="request")
+            self._metrics.record_replies(
+                len(reqs), (t_done - r.t_submit for r in reqs), t_done)
+
+    # ------------------------------------------------------------------ #
+    # telemetry
+    # ------------------------------------------------------------------ #
+
+    def record_qat_telemetry(self, batch: Optional[dict] = None) -> dict:
+        """Snapshot the live `QATState`'s per-site ranges into the
+        registry, and — when `batch` carries observations — probe per-site
+        activation extrema + saturation against a frozen snapshot of the
+        current quant params.  No-op (returns the current view) for
+        non-DDPG states or QAT-off training.  Returns the per-site
+        `qat_telemetry` stats view.
+        """
+        qat = getattr(self._state, "qat", None)
+        if qat is None or not qat.config.enabled:
+            return self._qat.stats()
+        self._qat.record_state(qat)
+        if batch is not None and "obs" in batch:
+            # eager probe (replay batches vary in row count; jit would
+            # retrace per shape) against the would-freeze-now quant params
+            frozen = ddpg.freeze_actor_quant(self._state)
+            mns, mxs, sats = ddpg.actor_site_telemetry(
+                self._state.actor, jnp.asarray(batch["obs"],
+                                               jnp.float32), frozen)
+            mns, mxs, sats = (np.asarray(mns), np.asarray(mxs),
+                              np.asarray(sats))
+            for i in range(mns.shape[0]):
+                self._qat.record_probe(f"act{i}", float(mns[i]),
+                                       float(mxs[i]), float(sats[i]))
+        return self._qat.stats()
 
     # ------------------------------------------------------------------ #
     # metrics
     # ------------------------------------------------------------------ #
 
     def stats(self) -> dict:
-        """Training-throughput metrics so far (totals exact over the
-        engine lifetime; latency percentiles over the recent window)."""
-        with self._mlock:
-            lat = np.asarray(self._lat_window, np.float64)
-            t = dict(self._totals)
-            hist = dict(self._mode_hist)
-            wall = (self._t_last - self._t_first
-                    if self._t_first is not None and self._t_last is not None
-                    else None)
+        """Training-throughput metrics so far, read off the shared
+        registry: exact lifetime totals, streaming-histogram latency
+        quantiles, the phase-keyed dispatch histogram, and the two audit
+        sections."""
+        m = self._metrics
+        device_s = m.device_s
+        wall = m.wall_s()
         return {
-            "requests": t["requests"],
-            "updates": t["updates"],
-            "transitions": t["transitions"],
-            "updates_per_s_device": (t["updates"] / t["device_s"]
-                                     if t["device_s"] > 0 else None),
-            "updates_per_s_wall": (t["updates"] / wall if wall else None),
-            "train_ips_device": (t["transitions"] / t["device_s"]
-                                 if t["device_s"] > 0 else None),
-            "train_ips_wall": (t["transitions"] / wall if wall else None),
-            "p50_ms": float(np.percentile(lat, 50) * 1e3) if lat.size else None,
-            "p99_ms": float(np.percentile(lat, 99) * 1e3) if lat.size else None,
-            "batch_occupancy": (t["occupancy_sum"] / t["updates"]
-                                if t["updates"] else None),
-            "mode_histogram": hist,
+            "requests": m.requests,
+            "updates": m.calls,
+            "transitions": m.items,
+            "updates_per_s_device": (m.calls / device_s
+                                     if device_s > 0 else None),
+            "updates_per_s_wall": (m.calls / wall if wall else None),
+            "train_ips_device": (m.items / device_s
+                                 if device_s > 0 else None),
+            "train_ips_wall": (m.items / wall if wall else None),
+            "p50_ms": m.latency_ms(0.50),
+            "p99_ms": m.latency_ms(0.99),
+            "batch_occupancy": m.occupancy(),
+            "mode_histogram": m.mode_histogram(),
             "cost_model": self.cost_model.source,
+            "dispatch_audit": self._audit.snapshot(),
+            "qat_telemetry": self._qat.stats(),
         }
 
     def reset_stats(self) -> None:
-        with self._mlock:
-            self._lat_window.clear()
-            self._totals = {k: type(v)() for k, v in self._totals.items()}
-            self._mode_hist = {}
-            self._t_first = self._t_last = None
+        self._metrics.reset()
+        self._audit.reset()
+        self._qat.reset()
 
 
 __all__ = ["LearnerEngine", "TRAIN_BACKENDS", "DEFAULT_BUCKETS"]

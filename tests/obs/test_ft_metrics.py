@@ -1,0 +1,68 @@
+"""runtime/ft x obs: heartbeat registry mirrored into the metrics store."""
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.ft import HeartbeatRegistry, TrainingSupervisor
+
+
+def test_heartbeats_mirror_into_metrics_registry():
+    t = [0.0]
+    reg = MetricsRegistry()
+    hb = HeartbeatRegistry(3, timeout_s=5.0, clock=lambda: t[0],
+                           metrics=reg)
+    assert reg.snapshot()["gauges"]["ft.hosts_alive"] == 3
+    hb.beat(0, 0.1)
+    hb.beat(1, 0.1)
+    hb.beat(2, 0.9)
+    t[0] = 1.0
+    for i, dt in ((0, 0.1), (1, 0.1), (2, 0.9)):
+        hb.beat(i, dt)
+    assert hb.detect_stragglers() == [2]
+
+    t[0] = 10.0
+    hb.beat(0, 0.1)
+    dead = hb.detect_failures()
+    assert dead == [1, 2]
+    hb.remove(dead)
+
+    s = reg.snapshot()
+    assert s["gauges"]["ft.hosts_alive"] == 1
+    assert s["counters"]["ft.failures"] == 2
+    assert s["counters"]["ft.stragglers"] == 1
+    assert s["counters"]["ft.host0.beats"] == 3
+    assert s["counters"]["ft.host2.beats"] == 2
+    assert s["gauges"]["ft.host0.last_beat"] == 10.0
+    hist = s["histograms"]["ft.step_time_s"]
+    assert hist["count"] == 7
+    assert hist["min"] <= 0.1 and hist["max"] >= 0.9
+    # re-removing an already-dead host must not double-count failures
+    hb.remove([1])
+    assert reg.snapshot()["counters"]["ft.failures"] == 2
+
+
+def test_heartbeat_registry_without_metrics_unchanged():
+    hb = HeartbeatRegistry(2, timeout_s=5.0)
+    hb.beat(0, 0.2)
+    assert hb.detect_stragglers() == []
+    hb.remove([1])
+    assert sorted(hb.hosts) == [0]
+
+
+def test_supervisor_passes_metrics_through():
+    t = [0.0]
+    reg = MetricsRegistry()
+    sup = TrainingSupervisor(3, devices_per_host=8, model_parallel=4,
+                             timeout_s=5.0, clock=lambda: t[0], metrics=reg)
+    sup.step_report(0, 0.5)
+    sup.step_report(1, 0.5)
+    sup.step_report(2, 0.5)
+    t[0] = 10.0
+    sup.step_report(0, 0.5)
+    plan = sup.check()
+    assert plan is not None and plan.n_devices == 8
+    s = reg.snapshot()
+    assert s["counters"]["ft.failures"] == 2
+    assert s["gauges"]["ft.hosts_alive"] == 1
+    # engines and the control plane can share ONE registry: namespaces
+    # keep them apart
+    assert all(name.startswith("ft.") for name in
+               list(s["counters"]) + list(s["gauges"]) +
+               list(s["histograms"]))

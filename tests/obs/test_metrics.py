@@ -1,0 +1,203 @@
+"""obs/metrics: registry semantics, histogram accuracy, thread safety."""
+import math
+import threading
+
+import numpy as np
+import pytest
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+
+
+# --------------------------------------------------------------------- #
+# counters / gauges / registry basics
+# --------------------------------------------------------------------- #
+
+def test_counter_and_gauge_basics():
+    c = Counter()
+    c.inc()
+    c.inc(3)
+    c.inc(0.5)
+    assert c.value == 4.5
+    c.reset()
+    assert c.value == 0
+
+    g = Gauge()
+    assert g.value is None
+    g.set_once(1.0)
+    g.set_once(2.0)         # idempotent: first set wins
+    assert g.value == 1.0
+    g.set(5.0)
+    assert g.value == 5.0
+    g.reset()
+    assert g.value is None
+    g.set_once(9.0)         # settable again after reset
+    assert g.value == 9.0
+
+
+def test_registry_get_or_create_idempotent_and_kind_checked():
+    reg = MetricsRegistry()
+    c1 = reg.counter("a.b")
+    c2 = reg.counter("a.b")
+    assert c1 is c2
+    with pytest.raises(TypeError):
+        reg.gauge("a.b")
+    with pytest.raises(TypeError):
+        reg.histogram("a.b")
+    assert reg.get("a.b") is c1
+    assert reg.get("nope") is None
+    reg.gauge("g")
+    reg.histogram("h")
+    assert reg.names() == ["a.b", "g", "h"]
+
+
+def test_registry_snapshot_groups_and_reset_keeps_handles():
+    reg = MetricsRegistry()
+    c = reg.counter("c")
+    g = reg.gauge("g")
+    h = reg.histogram("h")
+    c.inc(7)
+    g.set(1.5)
+    h.observe(0.1)
+    snap = reg.snapshot()
+    assert snap["counters"]["c"] == 7
+    assert snap["gauges"]["g"] == 1.5
+    assert snap["histograms"]["h"]["count"] == 1
+    reg.reset()
+    # handles cached by holders stay live after reset
+    assert c.value == 0 and g.value is None and h.count == 0
+    c.inc()
+    assert reg.snapshot()["counters"]["c"] == 1
+
+
+# --------------------------------------------------------------------- #
+# histogram quantile accuracy (the satellite's accuracy-bound test)
+# --------------------------------------------------------------------- #
+
+def test_histogram_quantiles_within_growth_bound_vs_numpy():
+    """Relative error of any in-range quantile is bounded by growth-1."""
+    rng = np.random.default_rng(0)
+    # lognormal spans several decades — the regime log buckets exist for
+    samples = np.exp(rng.normal(loc=-5.0, scale=2.0, size=50_000))
+    h = Histogram()          # defaults: lo=1e-7, hi=1e4, growth=1.15
+    for v in samples:
+        h.observe(float(v))
+    bound = h.growth - 1.0
+    for q in (0.01, 0.10, 0.50, 0.90, 0.99):
+        exact = float(np.quantile(samples, q))
+        approx = h.quantile(q)
+        assert approx is not None
+        assert abs(approx - exact) / exact <= bound, \
+            f"q={q}: {approx} vs exact {exact}"
+
+
+def test_histogram_edge_cases():
+    h = Histogram(lo=1e-3, hi=1e3, growth=1.5)
+    assert h.quantile(0.5) is None          # empty
+    assert h.summary()["count"] == 0
+    with pytest.raises(ValueError):
+        h.quantile(1.5)
+    # underflow (zeros) and overflow land on exact observed extremes
+    for v in (0.0, 0.0, 5e6):
+        h.observe(v)
+    assert h.quantile(0.0) == 0.0
+    assert h.quantile(0.5) == 0.0           # 2/3 of mass in underflow
+    assert h.quantile(1.0) == 5e6
+    s = h.summary()
+    assert s["min"] == 0.0 and s["max"] == 5e6 and s["count"] == 3
+    with pytest.raises(ValueError):
+        Histogram(lo=1.0, hi=0.5)
+    with pytest.raises(ValueError):
+        Histogram(growth=1.0)
+
+
+def test_histogram_single_value_is_exact():
+    h = Histogram()
+    h.observe(0.0123)
+    for q in (0.0, 0.5, 1.0):
+        assert h.quantile(q) == pytest.approx(0.0123)
+
+
+def test_histogram_merge_matches_union():
+    rng = np.random.default_rng(1)
+    a_s = np.exp(rng.normal(-4, 1, 5000))
+    b_s = np.exp(rng.normal(-2, 1, 5000))
+    a, b, u = Histogram(), Histogram(), Histogram()
+    for v in a_s:
+        a.observe(float(v))
+        u.observe(float(v))
+    for v in b_s:
+        b.observe(float(v))
+        u.observe(float(v))
+    a.merge(b)
+    assert a.count == u.count == 10_000
+    for q in (0.1, 0.5, 0.99):
+        assert a.quantile(q) == pytest.approx(u.quantile(q))
+    assert a.summary()["mean"] == pytest.approx(u.summary()["mean"])
+    with pytest.raises(ValueError):
+        a.merge(Histogram(growth=1.5))      # layout mismatch
+
+
+# --------------------------------------------------------------------- #
+# concurrency: hammer snapshot()/quantile() during threaded writes
+# --------------------------------------------------------------------- #
+
+def test_registry_concurrent_writes_and_snapshots():
+    """The satellite's concurrency test at the metrics layer: N writer
+    threads mutate counters/gauges/histograms while readers snapshot;
+    totals must come out exact and no reader may crash or see torn
+    state."""
+    reg = MetricsRegistry()
+    n_threads, per_thread = 8, 2000
+    stop = threading.Event()
+    errors = []
+
+    def writer(k):
+        c = reg.counter("hits")
+        g = reg.gauge(f"w{k}.last")
+        h = reg.histogram("lat")
+        for i in range(per_thread):
+            c.inc()
+            g.set(i)
+            h.observe(1e-4 * (1 + (i % 50)))
+
+    def reader():
+        try:
+            while not stop.is_set():
+                snap = reg.snapshot()
+                hits = snap["counters"].get("hits", 0)
+                assert 0 <= hits <= n_threads * per_thread
+                lat = snap["histograms"].get("lat")
+                if lat and lat["count"]:
+                    assert lat["min"] <= lat["p50"] <= lat["max"]
+                    assert lat["p50"] <= lat["p99"] <= lat["max"]
+        except Exception as err:  # noqa: BLE001 — surface in main thread
+            errors.append(err)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = [threading.Thread(target=writer, args=(k,))
+               for k in range(n_threads)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors, errors
+    assert reg.counter("hits").value == n_threads * per_thread
+    assert reg.histogram("lat").count == n_threads * per_thread
+
+
+def test_histogram_index_boundaries():
+    """Bucket index honors [lo*g^(i-1), lo*g^i) half-open intervals."""
+    h = Histogram(lo=1.0, hi=100.0, growth=2.0)
+    assert h._index(0.5) == 0               # underflow
+    assert h._index(1.0) == 1
+    assert h._index(1.999) == 1
+    assert h._index(2.0) == 2
+    assert h._index(1e9) == h._n + 1        # overflow
+    # quantile of in-bucket mass stays inside the bucket's range
+    for _ in range(100):
+        h.observe(3.0)
+    assert 2.0 <= h.quantile(0.5) <= 4.0
+    assert math.isclose(h.quantile(0.5), 3.0, rel_tol=1.0)

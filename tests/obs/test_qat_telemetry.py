@@ -1,0 +1,83 @@
+"""obs/qat: range snapshots off QATState + registry-backed site stats."""
+import json
+import math
+
+import jax.numpy as jnp
+import pytest
+
+from repro.core.qat import QATContext, QATState
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.qat import QATTelemetry, ranges_snapshot
+
+
+def _observed(state: QATState, site: str, mn: float, mx: float) -> QATState:
+    """One monitor-phase range observation via the QAT context."""
+    ctx = QATContext(state)
+    ctx.observe(site, jnp.float32(mn), jnp.float32(mx))
+    return ctx.finalize()
+
+
+def test_ranges_snapshot_disabled_and_none():
+    assert ranges_snapshot(None) == {}
+    st = QATState.init(delay=0, sites=("a",), n_bits=8, enabled=False)
+    assert ranges_snapshot(st) == {}
+
+
+def test_ranges_snapshot_fresh_and_observed():
+    # delay=10: monitor phase, so observations actually update the ranges
+    st = QATState.init(delay=10, sites=("a", "b"), n_bits=8)
+    snap = ranges_snapshot(st)
+    assert set(snap) == {"a", "b"}
+    # never-updated monitors: raw extrema are +-inf -> None, counts 0,
+    # finalized range degenerate-guarded to something usable
+    assert snap["a"]["raw_min"] is None and snap["a"]["raw_max"] is None
+    assert snap["a"]["count"] == 0
+    assert snap["a"]["a_min"] < snap["a"]["a_max"]
+    assert all(math.isfinite(v) for v in
+               (snap["a"]["a_min"], snap["a"]["a_max"]))
+    st2 = _observed(st, "a", -2.0, 3.0)
+    snap2 = ranges_snapshot(st2)
+    assert snap2["a"]["raw_min"] == pytest.approx(-2.0)
+    assert snap2["a"]["raw_max"] == pytest.approx(3.0)
+    assert snap2["a"]["count"] == 1
+    json.dumps(snap2)                       # strictly serializable
+
+
+def test_qat_telemetry_records_and_reads():
+    reg = MetricsRegistry()
+    qt = QATTelemetry(reg, prefix="t.qat")
+    assert qt.stats() == {}
+    qt.record_range("act0", -1.5, 2.5, count=7)
+    qt.record_probe("act0", -1.0, 2.0, 0.01)
+    qt.record_probe("act0", -1.2, 2.8, 0.03)
+    st = qt.stats()
+    assert set(st) == {"act0"}
+    e = st["act0"]
+    assert e["a_min"] == -1.5 and e["a_max"] == 2.5 and e["count"] == 7
+    assert e["act_min"] == -1.2 and e["act_max"] == 2.8  # latest probe
+    assert e["probes"] == 2
+    assert e["saturation"] == pytest.approx(0.02)        # mean
+    assert 0.01 <= e["saturation_p99"] <= 0.04
+    # metrics visible through the shared registry namespace
+    assert reg.gauge("t.qat.act0.a_min").value == -1.5
+    assert reg.histogram("t.qat.act0.saturation").count == 2
+    qt.reset()
+    st2 = qt.stats()
+    assert st2["act0"]["probes"] == 0 and st2["act0"]["a_min"] is None
+
+
+def test_qat_telemetry_record_state_roundtrip():
+    reg = MetricsRegistry()
+    qt = QATTelemetry(reg)
+    st = QATState.init(delay=10, sites=("s0",), n_bits=8)
+    st = _observed(st, "s0", -4.0, 4.0)
+    snap = qt.record_state(st)
+    assert set(snap) == {"s0"}
+    out = qt.stats()["s0"]
+    assert out["a_min"] == pytest.approx(snap["s0"]["a_min"])
+    assert out["a_max"] == pytest.approx(snap["s0"]["a_max"])
+    assert out["count"] == 1
+    # zero saturation probes: underflow bucket, quantiles clamp to 0.0
+    qt.record_probe("s0", -3.0, 3.0, 0.0)
+    assert qt.stats()["s0"]["saturation"] == 0.0
+    assert qt.stats()["s0"]["saturation_p99"] == 0.0

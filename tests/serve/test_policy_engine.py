@@ -412,5 +412,5 @@ def test_threaded_serving_parity_and_stats():
     assert stats["requests"] == 16
     assert stats["p50_ms"] is not None and stats["p99_ms"] >= stats["p50_ms"]
     assert 0 < stats["batch_occupancy"] <= 1.0
-    assert sum(stats["mode_histogram"].values()) == stats["batches"]
+    assert sum(stats["mode_histogram"]["act"].values()) == stats["batches"]
     assert stats["ips_device"] > 0

@@ -71,6 +71,11 @@ def test_serve_policy_drift_fails():
         lambda d: d["modes"].pop("fused"),
         lambda d: d["modes"]["jnp"].pop("ips_big"),
         lambda d: d["adaptive"].pop("mode_histogram"),
+        lambda d: d["adaptive"]["mode_histogram"].pop("act"),  # flat again
+        lambda d: d["adaptive"].pop("dispatch_audit"),  # v3 audit section
+        lambda d: d["adaptive"].pop("qat_telemetry"),
+        lambda d: d["adaptive"]["dispatch_audit"].pop("drift_factor"),
+        lambda d: d["adaptive"]["dispatch_audit"].pop("table"),
     ):
         bad = copy.deepcopy(good)
         mutate(bad)
@@ -91,6 +96,8 @@ def test_learner_drift_fails():
         lambda d: d["dispatch"].pop("act"),
         lambda d: d["adaptive"].pop("train_ips_wall"),
         lambda d: d["adaptive"]["mode_histogram"].pop("train"),
+        lambda d: d["adaptive"].pop("dispatch_audit"),  # v2 audit section
+        lambda d: d["adaptive"].pop("qat_telemetry"),
         lambda d: d["config"].update(buckets=[8, 32]),  # < 3 buckets
     ):
         bad = copy.deepcopy(good)

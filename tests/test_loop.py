@@ -117,7 +117,7 @@ def test_train_host_streams_updates_through_learner():
     st = learner.stats()
     assert st["updates"] == int(ts.agent.step) > 0
     assert st["transitions"] == st["updates"] * dcfg.batch_size
-    assert st["mode_histogram"] == {"jnp": st["updates"]}
+    assert st["mode_histogram"] == {"train": {"jnp": st["updates"]}}
     # the loop's final agent IS the engine's state (one source of truth)
     assert ts.agent is learner.state
     assert info["times"]["accelerator"] > 0

@@ -288,7 +288,7 @@ def test_threaded_streaming_applies_all_requests_sequentially():
     assert st["transitions"] == 48
     # coalescing means fewer updates than requests, all accounted
     assert st["updates"] == int(eng.state.step) - int(state.step)
-    assert sum(st["mode_histogram"].values()) == st["updates"]
+    assert sum(st["mode_histogram"]["train"].values()) == st["updates"]
     assert st["p99_ms"] >= st["p50_ms"]
     assert 0 < st["batch_occupancy"] <= 1.0
     assert st["updates_per_s_device"] > 0 and st["train_ips_device"] > 0
