@@ -101,12 +101,18 @@ def bench_train_step(report: dict, env, cfg, state, smoke: bool) -> None:
 
     res = {"batch": batch_size, "batches": list(train_batches),
            "updates_per_s": {}, "train_ips": {}, "ips_by_batch": {},
-           "pallas_calls_traced": {}}
-    for backend in ("jnp", "pallas"):
+           "pallas_calls_traced": {}, "launches_per_update": {}}
+    for backend in ("jnp", "pallas", "pallas_fused_step"):
         bcfg = dataclasses.replace(cfg, backend=backend,
                                    batch_size=batch_size)
-        res["pallas_calls_traced"][backend] = _count_pallas_calls(
+        calls = _count_pallas_calls(
             lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg), state, batch)
+        res["pallas_calls_traced"][backend] = calls
+        # one update executes every traced call exactly once for all three
+        # backends (no lax.cond dual-tracing on the train path), so the
+        # traced count IS the launch count — the v4 schema pins it per
+        # backend (jnp 0, custom-VJP pair 8, fused step 2)
+        res["launches_per_update"][backend] = calls
         upd = jax.jit(lambda s, b, bcfg=bcfg: ddpg.update(s, b, bcfg))
         per_batch = {}
         for tb in train_batches:
@@ -121,11 +127,13 @@ def bench_train_step(report: dict, env, cfg, state, smoke: bool) -> None:
         res["train_ips"][backend] = ups * batch_size
         emit(f"kernel/fxp_mlp/train_step/{backend}", 1e6 / ups,
              f"updates_per_s={ups:.2f};train_ips={ups * batch_size:.0f};"
-             f"batch={batch_size}")
-    res["speedup_vs_jnp"] = (res["updates_per_s"]["pallas"]
-                             / res["updates_per_s"]["jnp"])
+             f"batch={batch_size};launches={calls}")
+    res["speedup_vs_jnp"] = {
+        backend: res["updates_per_s"][backend] / res["updates_per_s"]["jnp"]
+        for backend in ("pallas", "pallas_fused_step")}
     emit("kernel/fxp_mlp/train_step/pallas_calls", 0.0,
-         "fused_fwd_bwd={};jnp={}".format(
+         "fused_step={};fused_fwd_bwd={};jnp={}".format(
+             res["pallas_calls_traced"]["pallas_fused_step"],
              res["pallas_calls_traced"]["pallas"],
              res["pallas_calls_traced"]["jnp"]))
     report["train"] = res
@@ -154,7 +162,7 @@ def bench_fused_mlp(smoke: bool = False) -> dict:
         return f
 
     report = {
-        "schema": "fixar/fused_mlp_bench/v3",
+        "schema": "fixar/fused_mlp_bench/v4",
         "config": {"batch": primary, "batches": list(batches), "net": dims,
                    "backend": jax.default_backend(), "smoke": smoke},
         "pallas_calls_traced": {},

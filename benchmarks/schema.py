@@ -47,9 +47,11 @@ FUSED_MLP_SCHEMA = {
     "required": ["schema", "config", "pallas_calls_traced", "phases",
                  "actor_ips", "actor_ips_by_batch", "train"],
     "properties": {
-        # v3: train section carries two-batch ips_by_batch so from_bench
-        # can fit the train-phase slope AND intercept
-        "schema": {"const": "fixar/fused_mlp_bench/v3"},
+        # v4: train section gains the whole-update fused-step backend — a
+        # pallas_fused_step column in updates_per_s / ips_by_batch, a
+        # launches_per_update table, and speedup_vs_jnp becomes a
+        # per-backend map ({"pallas": x, "pallas_fused_step": y})
+        "schema": {"const": "fixar/fused_mlp_bench/v4"},
         "config": {
             "type": "object",
             "required": ["batch", "batches", "net", "backend"],
@@ -83,19 +85,40 @@ FUSED_MLP_SCHEMA = {
             "type": "object",
             "required": ["batch", "updates_per_s", "train_ips",
                          "ips_by_batch", "pallas_calls_traced",
-                         "speedup_vs_jnp"],
+                         "launches_per_update", "speedup_vs_jnp"],
             "properties": {
                 "batch": {"type": "integer"},
                 "batches": {"type": "array", "items": {"type": "integer"},
                             "minItems": 2},
-                "updates_per_s": _NUM_MAP,
+                "updates_per_s": {
+                    "type": "object",
+                    "required": ["jnp", "pallas", "pallas_fused_step"],
+                    "additionalProperties": _NUM,
+                },
                 "train_ips": _NUM_MAP,
-                "ips_by_batch": _IPS_BY_BATCH,
+                "ips_by_batch": {
+                    "type": "object",
+                    "required": ["jnp", "pallas", "pallas_fused_step"],
+                    "additionalProperties": {
+                        "type": "object",
+                        "additionalProperties": _NUM,
+                        "minProperties": 2,
+                    },
+                },
                 "pallas_calls_traced": {
                     "type": "object",
                     "additionalProperties": {"type": "integer"},
                 },
-                "speedup_vs_jnp": _NUM,
+                "launches_per_update": {
+                    "type": "object",
+                    "required": ["jnp", "pallas", "pallas_fused_step"],
+                    "additionalProperties": {"type": "integer"},
+                },
+                "speedup_vs_jnp": {
+                    "type": "object",
+                    "required": ["pallas", "pallas_fused_step"],
+                    "additionalProperties": _NUM,
+                },
             },
         },
     },
@@ -244,7 +267,7 @@ LEARNER_SCHEMA = {
 }
 
 SCHEMAS_BY_TAG = {
-    "fixar/fused_mlp_bench/v3": FUSED_MLP_SCHEMA,
+    "fixar/fused_mlp_bench/v4": FUSED_MLP_SCHEMA,
     "fixar/serve_policy_bench/v3": SERVE_POLICY_SCHEMA,
     "fixar/learner_bench/v2": LEARNER_SCHEMA,
 }

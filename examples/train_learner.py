@@ -1,11 +1,13 @@
 """Stream batched DDPG updates through the learner engine.
 
 Simulates the training workload FIXAR's headline number comes from (many
-update batches driven through the fused kernel's custom VJP with
-intra-batch parallelism): producer threads submit replay batches and
-trajectory chunks; the update batcher coalesces them into padded buckets;
-the train-phase adaptive dispatcher picks fused-VJP vs jnp autodiff per
-micro-batch; every update applies sequentially to one training state.
+update batches driven through the fused kernels with intra-batch
+parallelism): producer threads submit replay batches and trajectory
+chunks; the update batcher coalesces them into padded buckets; the
+train-phase adaptive dispatcher picks per micro-batch between the
+2-launch whole-update kernel (`fused_step`: fwd+bwd+Adam+soft-update
+resident per loss), the fused custom-VJP pair (`fused`), and jnp
+autodiff; every update applies sequentially to one training state.
 
     PYTHONPATH=src python examples/train_learner.py
 """
@@ -48,6 +50,8 @@ def main():
     engine = LearnerEngine.from_ddpg(
         state, cfg, cost_model=cm,
         batcher=BatcherConfig(buckets=(8, 32, 128), max_wait_ms=2.0))
+    # warm the buckets the producers actually hit — large buckets dispatch
+    # to the fused-step whole-update kernel once calibration favors it
     n = engine.warmup(buckets=(8, 32), padded=True)
     print(f"learner up: net={engine.dims}, calibration={cm.source}, "
           f"warmed {n} executables")

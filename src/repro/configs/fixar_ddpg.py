@@ -1,5 +1,6 @@
 """FIXAR's own workload: DDPG 400-300 actor-critic on continuous-control
 benchmarks (the paper's §VI configuration)."""
+
 import dataclasses
 
 from repro.rl.ddpg import DDPGConfig
@@ -9,11 +10,10 @@ from repro.rl.ddpg import DDPGConfig
 class FixarConfig:
     env: str = "halfcheetah"
     ddpg: DDPGConfig = dataclasses.field(default_factory=DDPGConfig)
-    total_steps: int = 1_000_000      # paper: 1M timesteps
-    eval_every: int = 5_000           # paper cadence
-    qat_delay_frac: float = 0.4       # delay = frac * total steps
+    total_steps: int = 1_000_000  # paper: 1M timesteps
+    eval_every: int = 5_000  # paper cadence
+    qat_delay_frac: float = 0.4  # delay = frac * total steps
 
 
 CONFIG = FixarConfig()
-SMOKE = FixarConfig(env="pendulum", total_steps=2_000,
-                    ddpg=DDPGConfig(batch_size=32))
+SMOKE = FixarConfig(env="pendulum", total_steps=2_000, ddpg=DDPGConfig(batch_size=32))

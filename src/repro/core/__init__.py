@@ -1,9 +1,26 @@
 """FIXAR core: fixed-point arithmetic, QAT (Algorithm 1), adaptive parallelism."""
-from repro.core.fixedpoint import (FXP16, FXP32, QFormat, affine_dequantize,
-                                   affine_params, affine_quantize, dequantize,
-                                   fake_quant, fake_quant_affine, fxp_matmul_raw,
-                                   quantize)
+
+from repro.core.fixedpoint import (
+    FXP16,
+    FXP32,
+    QFormat,
+    affine_dequantize,
+    affine_params,
+    affine_quantize,
+    dequantize,
+    fake_quant,
+    fake_quant_affine,
+    fxp_matmul_raw,
+    quantize,
+)
 from repro.core.qat import QATConfig, QATContext, QATState, quantize_grads, quantize_weights
 from repro.core.ranges import RangeStat, init_ranges
-from repro.core.parallelism import (Logical, ShardingRules, constrain, rules_for,
-                                    serve_rules, train_rules, tree_shardings)
+from repro.core.parallelism import (
+    Logical,
+    ShardingRules,
+    constrain,
+    rules_for,
+    serve_rules,
+    train_rules,
+    tree_shardings,
+)

@@ -256,6 +256,19 @@ def fake_quant(x: Array, fmt: QFormat) -> Array:
     return _ste_round(scaled) * jnp.float32(fmt.scale)
 
 
+def project(x: Array, fmt: QFormat) -> Array:
+    """`fake_quant` without the STE wrapper: same clip, same round-to-even,
+    same values — but pure jnp, no custom_vjp primitive.  Pallas kernel
+    bodies cannot lower custom_vjp calls, so the fused training-step
+    epilogue inlines this form; parity with `fake_quant` is pinned in
+    tests/test_optim.py.
+    """
+    scale = jnp.float32(2.0 ** fmt.frac_bits)
+    scaled = jnp.clip(x * scale, jnp.float32(fmt.raw_min),
+                      jnp.float32(fmt.raw_max))
+    return jnp.round(scaled) * jnp.float32(fmt.scale)
+
+
 def fake_quant_affine(x: Array, a_min: Array, a_max: Array, n_bits: int) -> Array:
     """Algorithm-1 activation quantization as a differentiable fake-quant.
 
@@ -279,5 +292,6 @@ __all__ = [
     "quantize", "dequantize", "saturate",
     "fxp_add", "fxp_mul", "fxp_matmul_raw",
     "affine_params", "affine_quantize", "affine_dequantize",
-    "fake_quant", "fake_quant_affine", "quantization_error_bound",
+    "fake_quant", "fake_quant_affine", "project",
+    "quantization_error_bound",
 ]

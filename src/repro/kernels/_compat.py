@@ -1,4 +1,5 @@
 """jax-version compat shims and tiny helpers shared by the kernel modules."""
+
 from jax.experimental.pallas import tpu as pltpu
 
 # jax 0.4.x names this TPUCompilerParams; newer releases renamed it.

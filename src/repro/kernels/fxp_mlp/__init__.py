@@ -52,16 +52,42 @@ Design
   (sequential "arbitrary" grid), straight-through estimators at the fused
   QAT sites.  `rl/ddpg.py` trains through it with `backend="pallas"`.
 
-Files: `kernel.py` (pallas_call + grid spec, fwd + bwd), `ops.py` (jitted
-public wrappers, padding + range reduction + custom VJP), `ref.py`
-(pure-jnp per-layer oracle).  The per-layer `fxp_dense` chain stays
-available as the reference/fallback (`backend="pallas_layer"` in
-`rl/ddpg.py`); forward parity is asserted in tests/kernels/test_fxp_mlp.py,
-gradient parity in tests/kernels/test_fxp_mlp_grad.py.
+* **Whole-update fused step** (`fxp_mlp_train_step`): the endpoint of the
+  launch-count trajectory — one `ddpg.update` in exactly TWO launches
+  (critic step, actor step) instead of the custom-VJP path's eight.  The
+  contract that makes it work is *residuals stay in VMEM*: each launch runs
+  forward AND backward for its loss in one kernel body, so the per-layer
+  effective inputs / pre-STE site inputs / post-activation outputs are plain
+  VMEM values consumed by the backward sweep in the same grid step — they
+  are never written to HBM, never padded into residual outputs, never
+  re-read.  dW/db accumulate across batch blocks in VMEM scratch
+  (sequential "arbitrary" grid), and the LAST block runs the epilogue
+  in-kernel: Adam moment/param update (`optim/adam.leaf_update` /
+  `optim/fxp_adam.leaf_update(ste=False)` against SMEM-shipped
+  `StepConstants`) followed by the Polyak soft-update of the target nets.
+  The critic's first layer is split host-side into obs-rows and action-rows
+  so the actor's in-kernel output feeds it without a concat (launch 2), and
+  the target-critic sees kernel-computed target actions (launch 1).
+
+Train-time dispatch (`serve/policy` + `train/learner`) chooses between
+`fused_step` (2 launches, best at large batch), `fused` (the 8-launch
+custom-VJP pair, kept as the bit-parity reference), and `jnp` autodiff
+(lowest constant cost at tiny batches) via the calibrated affine cost
+model; `ddpg.update(backend=...)` maps "pallas_fused_step" / "pallas" /
+"jnp" onto the same three paths.
+
+Files: `kernel.py` (pallas_call + grid spec, fwd + bwd + whole-update
+step), `ops.py` (jitted public wrappers, padding + range reduction +
+custom VJP + `fxp_mlp_train_step`), `ref.py` (pure-jnp per-layer oracle).
+The per-layer `fxp_dense` chain stays available as the reference/fallback
+(`backend="pallas_layer"` in `rl/ddpg.py`); forward parity is asserted in
+tests/kernels/test_fxp_mlp.py, gradient parity in
+tests/kernels/test_fxp_mlp_grad.py, whole-step parity + the ≤2-launch
+regression in tests/kernels/test_fxp_mlp_step.py.
 """
 from repro.kernels.fxp_mlp.ops import (fxp_mlp_forward, fxp_mlp_infer,
-                                       fxp_mlp_train)
+                                       fxp_mlp_train, fxp_mlp_train_step)
 from repro.kernels.fxp_mlp.ref import ref_fxp_mlp
 
 __all__ = ["fxp_mlp_forward", "fxp_mlp_infer", "fxp_mlp_train",
-           "ref_fxp_mlp"]
+           "fxp_mlp_train_step", "ref_fxp_mlp"]

@@ -30,8 +30,28 @@ from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.fixedpoint import FXP32
 from repro.kernels._compat import CompilerParams
+from repro.optim import adam as fadam
+from repro.optim import fxp_adam
 
 Array = jax.Array
+
+# SMEM hyper-vector layout shared by the fused training-step kernels: the
+# loss/soft-update scalars followed by the Adam StepConstants fields, all
+# precomputed host-side (the (1-x) complements in double precision) so the
+# in-kernel epilogue is bit-compatible with the host optimizer path.
+_H_INVW = 0     # 1 / max(sum(w), 1) — weighted-mean denominator
+_H_GAMMA = 1    # discount (critic step only)
+_H_TAU = 2      # soft-update rate
+_H_OMTAU = 3    # 1 - tau, double-precision-then-f32
+_H_LR = 4
+_H_B1 = 5
+_H_OMB1 = 6     # 1 - b1
+_H_B2 = 7
+_H_OMB2 = 8     # 1 - b2
+_H_EPS = 9
+_H_BC1 = 10     # 1 - b1**t
+_H_BC2 = 11     # 1 - b2**t
+HYPER_LEN = 12
 
 
 def _site_project(x, quant, delta, z, *, n_bits: int, fxp32_phase1: bool):
@@ -346,3 +366,589 @@ def fxp_mlp_bwd_pallas(phase: Array, g: Array, x0: Array,
     dws = list(outs[1:1 + n_layers])
     dbs = list(outs[1 + n_layers:1 + 2 * n_layers])
     return dx, dws, dbs
+
+
+# ---------------------------------------------------------------------------
+# Fused DDPG training step: fwd + bwd + Adam + soft update, two launches
+# ---------------------------------------------------------------------------
+
+
+def _monitor_minmax(x, in_dim: int, row_ok):
+    """Padding-masked (min, max) of a site input block — the same masking
+    `_mlp_kernel`'s inline monitor uses."""
+    col_idx = jax.lax.broadcasted_iota(jnp.int32, x.shape, 1)
+    valid = jnp.logical_and(row_ok, col_idx < in_dim)
+    return (jnp.min(jnp.where(valid, x, jnp.inf)),
+            jnp.max(jnp.where(valid, x, -jnp.inf)))
+
+
+def _act_fwd(out, actn: str):
+    if actn == "relu":
+        return jnp.maximum(out, 0.0)
+    if actn == "tanh":
+        return jnp.tanh(out)
+    return out
+
+
+def _act_bwd(g, h, actn: str):
+    """Activation backward from the saved post-activation output — same
+    forms as `_mlp_bwd_kernel`."""
+    if actn == "relu":
+        return jnp.where(h > 0.0, g, 0.0)
+    if actn == "tanh":
+        return g * (1.0 - h * h)
+    return g
+
+
+def _ste_site_mask(g, x_in, quant, delta, z, *, n_bits: int,
+                   fxp32_phase1: bool):
+    """Quantize-site backward: the STE clip mask `_mlp_bwd_kernel` applies,
+    factored out so the fused training-step kernels share it."""
+    lo = -z * delta
+    hi = (jnp.float32((1 << n_bits) - 1) - z) * delta
+    pass_q = jnp.logical_and(x_in >= lo, x_in <= hi)
+    if fxp32_phase1:
+        s32 = jnp.float32(2.0 ** FXP32.frac_bits)
+        xs = x_in * s32
+        pass_f = jnp.logical_and(xs >= jnp.float32(FXP32.raw_min),
+                                 xs <= jnp.float32(FXP32.raw_max))
+    else:
+        pass_f = jnp.ones_like(pass_q)
+    return jnp.where(jnp.where(quant, pass_q, pass_f), g, 0.0)
+
+
+def _dense_fwd(x_parts, w_refs, b_ref, acc_ref, *, actn: str, quant):
+    """Dual-precision dense over one or more lane-aligned input segments.
+
+    With one segment this is exactly `_mlp_kernel`'s datapath (hi-limb dot
+    always, lo-limb dot predicated off in the quantized phase).  With two
+    segments the first layer's weight has been split host-side by input rows
+    (obs rows / action rows) so a kernel-computed action block can feed the
+    critic without an unaligned lane concat; the split dots accumulate into
+    the same f32 scratch.  Returns (per-segment effective dense inputs, the
+    post-activation output block).
+    """
+    n_out_p = w_refs[0].shape[1]
+    his, q_effs = [], []
+    for j, (x, w_ref) in enumerate(zip(x_parts, w_refs)):
+        hi_l = x.astype(jnp.bfloat16).astype(jnp.float32)
+        his.append(hi_l)
+        q_effs.append(jnp.where(quant, hi_l, x))
+        d = jnp.dot(hi_l, w_ref[...], preferred_element_type=jnp.float32)
+        if j == 0:
+            acc_ref[:, :n_out_p] = d
+        else:
+            acc_ref[:, :n_out_p] += d
+
+    def _lo_pass():
+        for x, hi_l, w_ref in zip(x_parts, his, w_refs):
+            acc_ref[:, :n_out_p] += jnp.dot(
+                x - hi_l, w_ref[...], preferred_element_type=jnp.float32)
+    pl.when(jnp.logical_not(quant))(_lo_pass)
+    return q_effs, _act_fwd(acc_ref[:, :n_out_p] + b_ref[...], actn)
+
+
+def _adam_soft_epilogue(hyper_ref, p_ref, g, m_ref, v_ref, t_ref,
+                        out_p_ref, out_m_ref, out_v_ref, out_t_ref, *,
+                        fxp_weights: bool):
+    """One parameter leaf of the in-kernel weight update: Adam from the
+    SMEM-shipped StepConstants (grad + param projected onto Q15.16 when
+    fxp_weights, via the optimizer's own `leaf_update` — one source of
+    truth with the host path), then the target net's soft update from the
+    freshly written param.  Padding self-preserves: pad entries have
+    p = g = m = v = t = 0, and Adam/soft-update map zeros to zeros.
+    """
+    c = fadam.StepConstants(
+        lr=hyper_ref[_H_LR], b1=hyper_ref[_H_B1],
+        one_minus_b1=hyper_ref[_H_OMB1], b2=hyper_ref[_H_B2],
+        one_minus_b2=hyper_ref[_H_OMB2], eps=hyper_ref[_H_EPS],
+        bc1=hyper_ref[_H_BC1], bc2=hyper_ref[_H_BC2])
+    if fxp_weights:
+        # ste=False: the value-identical projection without the custom_vjp
+        # wrapper (which cannot lower inside a kernel body)
+        p2, m2, v2 = fxp_adam.leaf_update(p_ref[...], g, m_ref[...],
+                                          v_ref[...], c, ste=False)
+    else:
+        p2, m2, v2 = fadam.leaf_update(p_ref[...], g, m_ref[...],
+                                       v_ref[...], c)
+    out_p_ref[...] = p2
+    out_m_ref[...] = m2
+    out_v_ref[...] = v2
+    out_t_ref[...] = (hyper_ref[_H_OMTAU] * t_ref[...]
+                      + hyper_ref[_H_TAU] * p2)
+
+
+def _ddpg_critic_step_kernel(phase_ref, *refs, n_layers: int, bm: int,
+                             m_valid: int, actor_acts, critic_acts,
+                             critic_in_dims, n_bits: int, qat: bool,
+                             fxp32_phase1: bool, fxp_weights: bool,
+                             n_blocks: int):
+    """Launch 1 of the fused DDPG step: the whole critic BP/WU.
+
+    Per batch block: target-actor fwd on next_obs (no monitors — the host
+    update discards target-pass observations), target-critic fwd (first
+    layer split into obs/action row halves so the in-kernel next_a feeds it
+    lane-aligned), TD target y, online-critic fwd with range monitors and
+    VMEM-local residuals, the weighted-MSE cotangent, and the full dx/dW/db
+    backward chain with dW/db accumulated in VMEM scratch across blocks
+    ("arbitrary" grid).  On the LAST block the epilogue runs Adam over the
+    accumulated grads and soft-updates the target critic — params never
+    leave the launch between BP and WU.
+    """
+    L = n_layers
+    pos = 0
+
+    def take(k):
+        nonlocal pos
+        out = refs[pos:pos + k]
+        pos += k
+        return out
+
+    xc_ref, nobs_ref, aux_ref = take(3)
+    at_wb = take(2 * L)
+    tw0_obs_ref, tw0_act_ref, tb0_ref = take(3)
+    ct_hi = take(2 * (L - 1))            # target critic layers 1..L-1
+    ct_w0_full_ref, = take(1)            # unsplit w0, soft-update operand
+    c_wb = take(2 * L)
+    m_wb = take(2 * L)
+    v_wb = take(2 * L)
+    deltas_ref, zs_ref, hyper_ref = take(3)
+    out_p = take(2 * L)
+    out_m = take(2 * L)
+    out_v = take(2 * L)
+    out_t = take(2 * L)
+    mins_ref, maxs_ref, part_ref = take(3)
+    acc_ref, = take(1)
+    dw_refs = take(L)
+    db_refs = take(L)
+    assert pos == len(refs)
+
+    i = pl.program_id(0)
+    quant = phase_ref[0] > 0
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    row_ok = (i * bm + row_idx) < m_valid
+
+    @pl.when(i == 0)
+    def _zero_accumulators():
+        for li in range(L):
+            dw_refs[li][...] = jnp.zeros_like(dw_refs[li])
+            db_refs[li][...] = jnp.zeros_like(db_refs[li])
+
+    xc = xc_ref[...]
+    nobs = nobs_ref[...]
+    reward = aux_ref[:, 0:1]
+    done = aux_ref[:, 1:2]
+    w = aux_ref[:, 2:3]
+
+    # ---- target actor forward on next_obs (observations discarded) --------
+    x = nobs
+    for li in range(L):
+        if qat:
+            x = _site_project(x, quant, deltas_ref[li], zs_ref[li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        _, x = _dense_fwd([x], [at_wb[2 * li]], at_wb[2 * li + 1], acc_ref,
+                          actn=actor_acts[li], quant=quant)
+    next_a = x   # (bm, 128); columns >= act_dim are exactly zero
+
+    # ---- target critic forward: split first layer, then the chain ---------
+    if qat:
+        nobs_q = _site_project(nobs, quant, deltas_ref[L], zs_ref[L],
+                               n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        na_q = _site_project(next_a, quant, deltas_ref[L], zs_ref[L],
+                             n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+    else:
+        nobs_q, na_q = nobs, next_a
+    _, x = _dense_fwd([nobs_q, na_q], [tw0_obs_ref, tw0_act_ref], tb0_ref,
+                      acc_ref, actn=critic_acts[0], quant=quant)
+    for li in range(1, L):
+        if qat:
+            x = _site_project(x, quant, deltas_ref[L + li], zs_ref[L + li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        _, x = _dense_fwd([x], [ct_hi[2 * (li - 1)]], ct_hi[2 * (li - 1) + 1],
+                          acc_ref, actn=critic_acts[li], quant=quant)
+    q_next = x[:, 0:1]
+    y = reward + (hyper_ref[_H_GAMMA] * (1.0 - done)) * q_next
+
+    # ---- online critic forward: monitors + VMEM-local residuals -----------
+    ss, qeffs, hs = [], [], []
+    x = xc
+    for li in range(L):
+        mn, mx = _monitor_minmax(x, critic_in_dims[li], row_ok)
+        mins_ref[0, li] = mn
+        maxs_ref[0, li] = mx
+        ss.append(x)
+        if qat:
+            x = _site_project(x, quant, deltas_ref[L + li], zs_ref[L + li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        qe, x = _dense_fwd([x], [c_wb[2 * li]], c_wb[2 * li + 1], acc_ref,
+                           actn=critic_acts[li], quant=quant)
+        qeffs.append(qe[0])
+        hs.append(x)
+    q = x[:, 0:1]
+
+    # ---- loss partials (host divides by sum(w) once) ----------------------
+    diff = q - y
+    part_ref[0, 0] = jnp.sum(w * (diff * diff))   # sum w * (q - y)^2
+    part_ref[0, 1] = jnp.sum(w * y)               # sum w * y  (q_mean)
+
+    # ---- backward: weighted-mean MSE cotangent, then the dW/db/dx chain ---
+    # d closs / dq = (w / sum_w) * 2 (q - y) — exactly XLA's transpose of
+    # _wmean(square(q - y), w); pad rows carry w = 0 so their gradient
+    # contribution is exactly zero
+    dval = (hyper_ref[_H_INVW] * w) * (2.0 * diff)
+    col_l = jax.lax.broadcasted_iota(jnp.int32, hs[-1].shape, 1)
+    g = jnp.where(col_l == 0, dval, 0.0)
+    for li in range(L - 1, -1, -1):
+        g = _act_bwd(g, hs[li], critic_acts[li])
+        db_refs[li][...] += jnp.sum(g, axis=0, keepdims=True)
+        dw_refs[li][...] += jax.lax.dot_general(
+            qeffs[li], g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        g = jax.lax.dot_general(
+            g, c_wb[2 * li][...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if qat:
+            g = _ste_site_mask(g, ss[li], quant, deltas_ref[L + li],
+                               zs_ref[L + li], n_bits=n_bits,
+                               fxp32_phase1=fxp32_phase1)
+
+    # ---- epilogue on the last block: Adam + target soft update ------------
+    @pl.when(i == n_blocks - 1)
+    def _epilogue():
+        for li in range(L):
+            t_w = ct_w0_full_ref if li == 0 else ct_hi[2 * (li - 1)]
+            t_b = tb0_ref if li == 0 else ct_hi[2 * (li - 1) + 1]
+            _adam_soft_epilogue(
+                hyper_ref, c_wb[2 * li], dw_refs[li][...], m_wb[2 * li],
+                v_wb[2 * li], t_w, out_p[2 * li], out_m[2 * li],
+                out_v[2 * li], out_t[2 * li], fxp_weights=fxp_weights)
+            _adam_soft_epilogue(
+                hyper_ref, c_wb[2 * li + 1], db_refs[li][...],
+                m_wb[2 * li + 1], v_wb[2 * li + 1], t_b, out_p[2 * li + 1],
+                out_m[2 * li + 1], out_v[2 * li + 1], out_t[2 * li + 1],
+                fxp_weights=fxp_weights)
+
+
+def _ddpg_actor_step_kernel(phase_ref, *refs, n_layers: int, bm: int,
+                            m_valid: int, obs_dim: int, act_dim: int,
+                            actor_acts, critic_acts, actor_in_dims,
+                            critic_in_dims, n_bits: int, qat: bool,
+                            fxp32_phase1: bool, fxp_weights: bool,
+                            n_blocks: int):
+    """Launch 2 of the fused DDPG step: the whole actor BP/WU.
+
+    Actor fwd with monitors/residuals, the UPDATED critic's fwd on
+    (obs, actor(obs)) — first layer split host-side so the in-kernel action
+    feeds it — with critic-site monitors, the policy-gradient cotangent
+    dq = -w/sum_w, a dx-only backward through the critic (STE at its
+    sites), then the actor's dW/db chain accumulated across blocks and the
+    same Adam + soft-update epilogue on the last block.
+    """
+    L = n_layers
+    pos = 0
+
+    def take(k):
+        nonlocal pos
+        out = refs[pos:pos + k]
+        pos += k
+        return out
+
+    obs_ref, aux_ref = take(2)
+    a_wb = take(2 * L)
+    m_wb = take(2 * L)
+    v_wb = take(2 * L)
+    at_wb = take(2 * L)                  # actor target (soft-update operand)
+    cw0_obs_ref, cw0_act_ref, cb0_ref = take(3)
+    c_hi = take(2 * (L - 1))             # updated critic layers 1..L-1
+    deltas_ref, zs_ref, hyper_ref = take(3)
+    out_p = take(2 * L)
+    out_m = take(2 * L)
+    out_v = take(2 * L)
+    out_t = take(2 * L)
+    mins_ref, maxs_ref, part_ref = take(3)
+    acc_ref, = take(1)
+    dw_refs = take(L)
+    db_refs = take(L)
+    assert pos == len(refs)
+
+    i = pl.program_id(0)
+    quant = phase_ref[0] > 0
+    row_idx = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)
+    row_ok = (i * bm + row_idx) < m_valid
+
+    @pl.when(i == 0)
+    def _zero_accumulators():
+        for li in range(L):
+            dw_refs[li][...] = jnp.zeros_like(dw_refs[li])
+            db_refs[li][...] = jnp.zeros_like(db_refs[li])
+
+    obs = obs_ref[...]
+    w = aux_ref[:, 2:3]
+
+    # ---- actor forward: monitors + residuals ------------------------------
+    x = obs
+    a_ss, a_qs, a_hs = [], [], []
+    for li in range(L):
+        mn, mx = _monitor_minmax(x, actor_in_dims[li], row_ok)
+        mins_ref[0, li] = mn
+        maxs_ref[0, li] = mx
+        a_ss.append(x)
+        if qat:
+            x = _site_project(x, quant, deltas_ref[li], zs_ref[li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        qe, x = _dense_fwd([x], [a_wb[2 * li]], a_wb[2 * li + 1], acc_ref,
+                           actn=actor_acts[li], quant=quant)
+        a_qs.append(qe[0])
+        a_hs.append(x)
+    a = x   # (bm, 128); columns >= act_dim exactly zero
+
+    # ---- updated-critic forward on (obs, a): split first layer ------------
+    # the l0 site monitor sees the concat input: combine the two segments'
+    # masked extrema — identical to one min/max over the concat
+    mn_o, mx_o = _monitor_minmax(obs, obs_dim, row_ok)
+    mn_a, mx_a = _monitor_minmax(a, act_dim, row_ok)
+    mins_ref[0, L] = jnp.minimum(mn_o, mn_a)
+    maxs_ref[0, L] = jnp.maximum(mx_o, mx_a)
+    if qat:
+        obs_q = _site_project(obs, quant, deltas_ref[L], zs_ref[L],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        a_q = _site_project(a, quant, deltas_ref[L], zs_ref[L],
+                            n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+    else:
+        obs_q, a_q = obs, a
+    c_ss = [None]   # l0's site backward runs on the action segment directly
+    c_hs = []
+    _, x = _dense_fwd([obs_q, a_q], [cw0_obs_ref, cw0_act_ref], cb0_ref,
+                      acc_ref, actn=critic_acts[0], quant=quant)
+    c_hs.append(x)
+    for li in range(1, L):
+        mn, mx = _monitor_minmax(x, critic_in_dims[li], row_ok)
+        mins_ref[0, L + li] = mn
+        maxs_ref[0, L + li] = mx
+        c_ss.append(x)
+        if qat:
+            x = _site_project(x, quant, deltas_ref[L + li], zs_ref[L + li],
+                              n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+        _, x = _dense_fwd([x], [c_hi[2 * (li - 1)]], c_hi[2 * (li - 1) + 1],
+                          acc_ref, actn=critic_acts[li], quant=quant)
+        c_hs.append(x)
+    q = x[:, 0:1]
+    part_ref[0, 0] = jnp.sum(w * q)   # aloss = -(sum w q) / sum_w, on host
+
+    # ---- backward: policy-gradient cotangent, dx-only through the critic --
+    dval = (-hyper_ref[_H_INVW]) * w
+    col_l = jax.lax.broadcasted_iota(jnp.int32, c_hs[-1].shape, 1)
+    g = jnp.where(col_l == 0, dval, 0.0)
+    for li in range(L - 1, 0, -1):
+        g = _act_bwd(g, c_hs[li], critic_acts[li])
+        g = jax.lax.dot_general(
+            g, c_hi[2 * (li - 1)][...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if qat:
+            g = _ste_site_mask(g, c_ss[li], quant, deltas_ref[L + li],
+                               zs_ref[L + li], n_bits=n_bits,
+                               fxp32_phase1=fxp32_phase1)
+    g = _act_bwd(g, c_hs[0], critic_acts[0])
+    # da = g @ W0_act^T: exactly the action-column block of the full-concat
+    # dx (padded rows of the split weight are zero, so padded action
+    # columns get exactly zero gradient)
+    g = jax.lax.dot_general(
+        g, cw0_act_ref[...], (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    if qat:
+        g = _ste_site_mask(g, a, quant, deltas_ref[L], zs_ref[L],
+                           n_bits=n_bits, fxp32_phase1=fxp32_phase1)
+
+    # ---- actor backward with dW/db accumulation ---------------------------
+    for li in range(L - 1, -1, -1):
+        g = _act_bwd(g, a_hs[li], actor_acts[li])
+        db_refs[li][...] += jnp.sum(g, axis=0, keepdims=True)
+        dw_refs[li][...] += jax.lax.dot_general(
+            a_qs[li], g, (((0,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        g = jax.lax.dot_general(
+            g, a_wb[2 * li][...], (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        if qat:
+            g = _ste_site_mask(g, a_ss[li], quant, deltas_ref[li],
+                               zs_ref[li], n_bits=n_bits,
+                               fxp32_phase1=fxp32_phase1)
+
+    @pl.when(i == n_blocks - 1)
+    def _epilogue():
+        for li in range(L):
+            _adam_soft_epilogue(
+                hyper_ref, a_wb[2 * li], dw_refs[li][...], m_wb[2 * li],
+                v_wb[2 * li], at_wb[2 * li], out_p[2 * li], out_m[2 * li],
+                out_v[2 * li], out_t[2 * li], fxp_weights=fxp_weights)
+            _adam_soft_epilogue(
+                hyper_ref, a_wb[2 * li + 1], db_refs[li][...],
+                m_wb[2 * li + 1], v_wb[2 * li + 1], at_wb[2 * li + 1],
+                out_p[2 * li + 1], out_m[2 * li + 1], out_v[2 * li + 1],
+                out_t[2 * li + 1], fxp_weights=fxp_weights)
+
+
+def _const_spec(a):
+    return pl.BlockSpec(a.shape, lambda i, ph: (0, 0))
+
+
+def _batch_spec(bm, a):
+    return pl.BlockSpec((bm, a.shape[1]), lambda i, ph: (i, 0))
+
+
+def ddpg_critic_step_pallas(phase, xc, nobs, aux, at_wb, tw0_obs, tw0_act,
+                            tb0, ct_hi, ct_w0_full, c_wb, m_wb, v_wb,
+                            deltas, zs, hyper, *, actor_acts, critic_acts,
+                            critic_in_dims, m_valid: int, bm: int,
+                            n_bits: int, qat: bool, fxp32_phase1: bool,
+                            fxp_weights: bool, interpret: bool):
+    """Launch 1 pallas_call: fused critic fwd+bwd+Adam+soft-update.
+
+    All shapes pre-padded.  xc (Mp, 128) concat(obs, act); nobs (Mp, 128);
+    aux (Mp, 128) with [reward, done, w] in cols 0..2.  at_wb / c_wb /
+    m_wb / v_wb: interleaved (w0, b0, w1, b1, ...) padded leaves.  tw0_obs /
+    tw0_act: the target critic's first-layer weight split by input rows
+    (obs rows / action rows, each padded to the lane-aligned xc layout);
+    ct_w0_full is the same weight unsplit — the soft-update operand.
+    deltas/zs: (2L,) f32 SMEM (actor sites then critic sites); hyper:
+    (HYPER_LEN,) f32 SMEM (see the layout constants above).
+
+    Returns (new_c_wb, new_m_wb, new_v_wb, new_ct_wb, mins, maxs, partials)
+    with mins/maxs (n_blocks, L) critic-site extrema and partials
+    (n_blocks, 2) = per-block [sum w*(q-y)^2, sum w*y].
+    """
+    L = len(c_wb) // 2
+    mp = xc.shape[0]
+    n_blocks = mp // bm
+    max_np = max(w.shape[1] for w in c_wb[0::2])
+
+    args, in_specs = [], []
+    for a in (xc, nobs, aux):
+        args.append(a)
+        in_specs.append(_batch_spec(bm, a))
+    for a in (*at_wb, tw0_obs, tw0_act, tb0, *ct_hi, ct_w0_full,
+              *c_wb, *m_wb, *v_wb):
+        args.append(a)
+        in_specs.append(_const_spec(a))
+    for a in (deltas, zs, hyper):
+        args.append(a)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+
+    out_specs, out_shape = [], []
+    for _ in range(4):                       # out_p, out_m, out_v, out_t
+        for a in c_wb:
+            out_specs.append(_const_spec(a))
+            out_shape.append(jax.ShapeDtypeStruct(a.shape, jnp.float32))
+    for width in (L, L, 2):                  # mins, maxs, partials
+        out_specs.append(pl.BlockSpec((1, width), lambda i, ph: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((n_blocks, width),
+                                              jnp.float32))
+
+    scratch = [pltpu.VMEM((bm, max_np), jnp.float32)]
+    scratch += [pltpu.VMEM(w.shape, jnp.float32) for w in c_wb[0::2]]
+    scratch += [pltpu.VMEM((1, w.shape[1]), jnp.float32)
+                for w in c_wb[0::2]]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    kern = functools.partial(
+        _ddpg_critic_step_kernel, n_layers=L, bm=bm, m_valid=m_valid,
+        actor_acts=tuple(actor_acts), critic_acts=tuple(critic_acts),
+        critic_in_dims=tuple(critic_in_dims), n_bits=n_bits, qat=qat,
+        fxp32_phase1=fxp32_phase1, fxp_weights=fxp_weights,
+        n_blocks=n_blocks)
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(phase, *args)
+    new_p = list(outs[0:2 * L])
+    new_m = list(outs[2 * L:4 * L])
+    new_v = list(outs[4 * L:6 * L])
+    new_t = list(outs[6 * L:8 * L])
+    mins, maxs, part = outs[8 * L:8 * L + 3]
+    return new_p, new_m, new_v, new_t, mins, maxs, part
+
+
+def ddpg_actor_step_pallas(phase, obs, aux, a_wb, m_wb, v_wb, at_wb,
+                           cw0_obs, cw0_act, cb0, c_hi, deltas, zs, hyper,
+                           *, obs_dim: int, act_dim: int, actor_acts,
+                           critic_acts, actor_in_dims, critic_in_dims,
+                           m_valid: int, bm: int, n_bits: int, qat: bool,
+                           fxp32_phase1: bool, fxp_weights: bool,
+                           interpret: bool):
+    """Launch 2 pallas_call: fused actor fwd+bwd+Adam+soft-update through
+    the freshly updated critic (cw0_obs/cw0_act/cb0/c_hi are launch 1's
+    outputs, first layer re-split host-side by obs/action input rows).
+
+    Returns (new_a_wb, new_m_wb, new_v_wb, new_at_wb, mins, maxs, partials)
+    with mins/maxs (n_blocks, 2L): cols 0..L-1 actor sites, L..2L-1 the
+    critic sites as seen by the actor-loss pass; partials (n_blocks, 1)
+    = per-block sum w*q.
+    """
+    L = len(a_wb) // 2
+    mp = obs.shape[0]
+    n_blocks = mp // bm
+    max_np = max(w.shape[1] for w in (*a_wb[0::2], cw0_obs, *c_hi[0::2]))
+
+    args, in_specs = [], []
+    for a in (obs, aux):
+        args.append(a)
+        in_specs.append(_batch_spec(bm, a))
+    for a in (*a_wb, *m_wb, *v_wb, *at_wb, cw0_obs, cw0_act, cb0, *c_hi):
+        args.append(a)
+        in_specs.append(_const_spec(a))
+    for a in (deltas, zs, hyper):
+        args.append(a)
+        in_specs.append(pl.BlockSpec(memory_space=pltpu.SMEM))
+
+    out_specs, out_shape = [], []
+    for _ in range(4):                       # out_p, out_m, out_v, out_t
+        for a in a_wb:
+            out_specs.append(_const_spec(a))
+            out_shape.append(jax.ShapeDtypeStruct(a.shape, jnp.float32))
+    for width in (2 * L, 2 * L, 1):          # mins, maxs, partials
+        out_specs.append(pl.BlockSpec((1, width), lambda i, ph: (i, 0)))
+        out_shape.append(jax.ShapeDtypeStruct((n_blocks, width),
+                                              jnp.float32))
+
+    scratch = [pltpu.VMEM((bm, max_np), jnp.float32)]
+    scratch += [pltpu.VMEM(w.shape, jnp.float32) for w in a_wb[0::2]]
+    scratch += [pltpu.VMEM((1, w.shape[1]), jnp.float32)
+                for w in a_wb[0::2]]
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        scratch_shapes=scratch,
+    )
+    kern = functools.partial(
+        _ddpg_actor_step_kernel, n_layers=L, bm=bm, m_valid=m_valid,
+        obs_dim=obs_dim, act_dim=act_dim, actor_acts=tuple(actor_acts),
+        critic_acts=tuple(critic_acts),
+        actor_in_dims=tuple(actor_in_dims),
+        critic_in_dims=tuple(critic_in_dims), n_bits=n_bits, qat=qat,
+        fxp32_phase1=fxp32_phase1, fxp_weights=fxp_weights,
+        n_blocks=n_blocks)
+    outs = pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=out_shape,
+        compiler_params=CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(phase, *args)
+    new_p = list(outs[0:2 * L])
+    new_m = list(outs[2 * L:4 * L])
+    new_v = list(outs[4 * L:6 * L])
+    new_t = list(outs[6 * L:8 * L])
+    mins, maxs, part = outs[8 * L:8 * L + 3]
+    return new_p, new_m, new_v, new_t, mins, maxs, part

@@ -284,3 +284,186 @@ def fused_cost_hint(dims: Sequence[int], phase: str = "act") -> dict:
         raise ValueError(f"unknown cost phase {phase!r}; 'act' | 'train'")
     return {"launches": 1, "flops_per_item": mlp_flops(dims),
             "parallelism": "intra_batch"}
+
+
+# ---------------------------------------------------------------------------
+# Fused DDPG training step (2 launches: critic BP/WU, then actor BP/WU)
+# ---------------------------------------------------------------------------
+
+
+def _pad_wb(ws: Sequence[Array], bs: Sequence[Array]) -> list:
+    """Pad per-layer (w, b) leaves to lane tiles, interleaved
+    [w0, b0, w1, b1, ...] — the layout the fused-step kernels consume."""
+    out = []
+    for w, b in zip(ws, bs):
+        k, n = w.shape
+        kp, np_ = _round_up(k, 128), _round_up(n, 128)
+        out.append(jnp.pad(w.astype(jnp.float32),
+                           ((0, kp - k), (0, np_ - n))))
+        out.append(jnp.pad(b.astype(jnp.float32),
+                           (0, np_ - n)).reshape(1, np_))
+    return out
+
+
+def _pad_batch(a: Array, mp: int) -> Array:
+    """Pad a (B, k) batch array to (mp, 128) — rows AND lanes zero-filled."""
+    b, k = a.shape
+    return jnp.pad(a.astype(jnp.float32),
+                   ((0, mp - b), (0, _round_up(k, 128) - k)))
+
+
+def _split_w0(w0p: Array, obs_dim: int, act_dim: int) -> tuple[Array, Array]:
+    """Split a padded critic first-layer weight by input rows so the kernel
+    can feed it two lane-aligned segments (obs block, action block) instead
+    of one concat: rows >= obs_dim zeroed for the obs half, action rows
+    moved up to rows 0..act_dim-1 for the action half.  dot(obs_seg, W_obs)
+    + dot(act_seg, W_act) == dot(concat, W) by block structure."""
+    row = jax.lax.broadcasted_iota(jnp.int32, w0p.shape, 0)
+    w_obs = jnp.where(row < obs_dim, w0p, 0.0)
+    w_act = jnp.pad(
+        jax.lax.dynamic_slice_in_dim(w0p, obs_dim, act_dim, axis=0),
+        ((0, w0p.shape[0] - act_dim), (0, 0)))
+    return w_obs, w_act
+
+
+class TrainStepOut(NamedTuple):
+    """Everything `ddpg._update_fused_step` needs back from the 2 launches."""
+
+    actor: tuple          # (ws, bs) unpadded
+    critic: tuple
+    actor_t: tuple
+    critic_t: tuple
+    actor_m: tuple        # ((w moments), (b moments)) unpadded
+    actor_v: tuple
+    critic_m: tuple
+    critic_v: tuple
+    closs_sum: Array      # sum w * (q - y)^2
+    y_sum: Array          # sum w * y
+    q_sum: Array          # sum w * q(obs, actor(obs))
+    c_mins: Array         # (L,)  critic-site extrema, critic-loss pass
+    c_maxs: Array
+    a_mins: Array         # (2L,) actor sites then critic sites, actor pass
+    a_maxs: Array
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "actor_acts", "critic_acts", "obs_dim", "act_dim", "gamma", "tau",
+    "n_bits", "qat", "fxp32_phase1", "fxp_weights", "interpret"))
+def fxp_mlp_train_step(obs, action, reward, done, next_obs, w,
+                       actor_wb, critic_wb, actor_t_wb, critic_t_wb,
+                       actor_m, actor_v, critic_m, critic_v,
+                       deltas, zs, consts_c, consts_a, quant_phase, *,
+                       actor_acts, critic_acts, obs_dim: int, act_dim: int,
+                       gamma: float, tau: float, n_bits: int = 16,
+                       qat: bool = True, fxp32_phase1: bool = True,
+                       fxp_weights: bool = True,
+                       interpret: Optional[bool] = None) -> TrainStepOut:
+    """One whole DDPG update in TWO Pallas launches.
+
+    Launch 1 (critic step): target-actor fwd, target-critic fwd, TD target,
+    online-critic fwd with monitors, weighted-MSE backward, Adam, target
+    soft update — params, residuals, and grad accumulators all
+    network-resident.  Launch 2 (actor step): actor fwd, updated-critic fwd,
+    policy-gradient backward (dx-only through the critic), Adam, target soft
+    update.  Every *_wb / moment argument is ((w per layer), (b per layer))
+    of UNPADDED leaves; `consts_c` / `consts_a` are `adam.StepConstants` for
+    the post-increment critic/actor optimizer steps; `w` is the (B,) sample
+    weight vector (ones when the batch carries no mask).  `gamma`/`tau` are
+    static floats so their complements fold in double precision, matching
+    the host path bit-for-bit.
+    """
+    from repro.kernels.fxp_mlp.kernel import (
+        HYPER_LEN, ddpg_actor_step_pallas, ddpg_critic_step_pallas)
+    assert HYPER_LEN == 12
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    a_ws, a_bs = actor_wb
+    c_ws, c_bs = critic_wb
+    L = len(a_ws)
+    b_rows = obs.shape[0]
+    bm = _row_block(b_rows)
+    mp = _round_up(b_rows, bm)
+
+    actor_in_dims = (obs_dim,) + tuple(int(x.shape[0]) for x in a_ws[1:])
+    critic_in_dims = ((obs_dim + act_dim,)
+                      + tuple(int(x.shape[0]) for x in c_ws[1:]))
+
+    obs_p = _pad_batch(obs.astype(jnp.float32), mp)
+    nobs_p = _pad_batch(next_obs.astype(jnp.float32), mp)
+    xc_p = _pad_batch(
+        jnp.concatenate([obs, action], axis=-1).astype(jnp.float32), mp)
+    aux_p = _pad_batch(
+        jnp.stack([reward.reshape(-1), done.reshape(-1),
+                   w.reshape(-1)], axis=-1), mp)
+
+    a_wbp = _pad_wb(a_ws, a_bs)
+    c_wbp = _pad_wb(c_ws, c_bs)
+    at_wbp = _pad_wb(*actor_t_wb)
+    ct_wbp = _pad_wb(*critic_t_wb)
+    am_p = _pad_wb(*actor_m)
+    av_p = _pad_wb(*actor_v)
+    cm_p = _pad_wb(*critic_m)
+    cv_p = _pad_wb(*critic_v)
+
+    tw0_obs, tw0_act = _split_w0(ct_wbp[0], obs_dim, act_dim)
+
+    inv_w = 1.0 / jnp.maximum(jnp.sum(w.astype(jnp.float32)), 1.0)
+    # (1 - tau) folded in Python double then cast, exactly like the host
+    # tree.map soft update's weak-typed constant
+    loss_scalars = [inv_w, jnp.float32(gamma), jnp.float32(tau),
+                    jnp.float32(1 - tau)]
+    hyper_c = jnp.stack(loss_scalars + [
+        consts_c.lr, consts_c.b1, consts_c.one_minus_b1, consts_c.b2,
+        consts_c.one_minus_b2, consts_c.eps, consts_c.bc1, consts_c.bc2])
+    hyper_a = jnp.stack(loss_scalars + [
+        consts_a.lr, consts_a.b1, consts_a.one_minus_b1, consts_a.b2,
+        consts_a.one_minus_b2, consts_a.eps, consts_a.bc1, consts_a.bc2])
+
+    deltas2, zs2 = _norm_quant_params(deltas, zs, 2 * L, qat)
+    phase = jnp.asarray(quant_phase, jnp.int32).reshape(1)
+
+    ncp, ncm, ncv, nct, mins1, maxs1, part1 = ddpg_critic_step_pallas(
+        phase, xc_p, nobs_p, aux_p, at_wbp, tw0_obs, tw0_act, ct_wbp[1],
+        ct_wbp[2:], ct_wbp[0], c_wbp, cm_p, cv_p, deltas2, zs2, hyper_c,
+        actor_acts=actor_acts, critic_acts=critic_acts,
+        critic_in_dims=critic_in_dims, m_valid=b_rows, bm=bm,
+        n_bits=n_bits, qat=qat, fxp32_phase1=fxp32_phase1,
+        fxp_weights=fxp_weights, interpret=interpret)
+
+    # launch 2 sees the UPDATED critic (first layer re-split)
+    cw0_obs, cw0_act = _split_w0(ncp[0], obs_dim, act_dim)
+
+    nap, nam, nav, nat, mins2, maxs2, part2 = ddpg_actor_step_pallas(
+        phase, obs_p, aux_p, a_wbp, am_p, av_p, at_wbp, cw0_obs, cw0_act,
+        ncp[1], ncp[2:], deltas2, zs2, hyper_a, obs_dim=obs_dim,
+        act_dim=act_dim, actor_acts=actor_acts, critic_acts=critic_acts,
+        actor_in_dims=actor_in_dims, critic_in_dims=critic_in_dims,
+        m_valid=b_rows, bm=bm, n_bits=n_bits, qat=qat,
+        fxp32_phase1=fxp32_phase1, fxp_weights=fxp_weights,
+        interpret=interpret)
+
+    def unpad(wbp, ws_ref, bs_ref):
+        ws = tuple(wbp[2 * i][:w.shape[0], :w.shape[1]]
+                   for i, w in enumerate(ws_ref))
+        bs = tuple(wbp[2 * i + 1][0, :b.shape[0]]
+                   for i, b in enumerate(bs_ref))
+        return ws, bs
+
+    return TrainStepOut(
+        actor=unpad(nap, a_ws, a_bs),
+        critic=unpad(ncp, c_ws, c_bs),
+        actor_t=unpad(nat, a_ws, a_bs),
+        critic_t=unpad(nct, c_ws, c_bs),
+        actor_m=unpad(nam, a_ws, a_bs),
+        actor_v=unpad(nav, a_ws, a_bs),
+        critic_m=unpad(ncm, c_ws, c_bs),
+        critic_v=unpad(ncv, c_ws, c_bs),
+        closs_sum=jnp.sum(part1[:, 0]),
+        y_sum=jnp.sum(part1[:, 1]),
+        q_sum=jnp.sum(part2[:, 0]),
+        c_mins=jnp.min(mins1, axis=0),
+        c_maxs=jnp.max(maxs1, axis=0),
+        a_mins=jnp.min(mins2, axis=0),
+        a_maxs=jnp.max(maxs2, axis=0),
+    )

@@ -7,7 +7,7 @@ float reference and the optimizer used by the LM training substrate.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +55,65 @@ def clip_by_global_norm(grads: PyTree, max_norm: float) -> tuple[PyTree, Array]:
     return jax.tree.map(lambda g: g * scale, grads), norm
 
 
+class StepConstants(NamedTuple):
+    """Per-step scalars of the Adam update, precomputed ONCE per step.
+
+    The `(1 - b)` complements are evaluated in Python double precision and
+    cast to f32 exactly as the fused per-leaf expression used to
+    constant-fold them, so `leaf_update` is bit-identical to the historical
+    inline form.  Being a flat tuple of f32 scalars, the whole bundle can be
+    shipped to a Pallas kernel through SMEM and rebuilt inside the kernel
+    body (see kernels/fxp_mlp/kernel.py's fused-step epilogue).
+    """
+    lr: Array
+    b1: Array
+    one_minus_b1: Array
+    b2: Array
+    one_minus_b2: Array
+    eps: Array
+    bc1: Array    # 1 - b1**t  (bias correction, post-increment step t)
+    bc2: Array    # 1 - b2**t
+
+
+def step_constants(cfg: AdamConfig, step: Array) -> StepConstants:
+    """Constants for the update at post-increment step `step` (= state.step
+    + 1): schedule-folded lr, bias corrections, and the beta complements."""
+    t = step.astype(jnp.float32)
+    lr = jnp.asarray(cfg.lr, jnp.float32)
+    if cfg.schedule is not None:
+        lr = lr * cfg.schedule(step)
+    return StepConstants(
+        lr=lr,
+        b1=jnp.float32(cfg.b1),
+        one_minus_b1=jnp.float32(1 - cfg.b1),
+        b2=jnp.float32(cfg.b2),
+        one_minus_b2=jnp.float32(1 - cfg.b2),
+        eps=jnp.float32(cfg.eps),
+        bc1=1.0 - cfg.b1 ** t,
+        bc2=1.0 - cfg.b2 ** t,
+    )
+
+
+def leaf_update(p: Array, g: Array, m: Array, v: Array, c: StepConstants,
+                *, weight_decay: float = 0.0) -> tuple[Array, Array, Array]:
+    """One leaf of the Adam step in flat kernel-friendly form.
+
+    Pure elementwise f32 math against precomputed `StepConstants` — no
+    per-leaf scalar recomputation, no pytree machinery — so the exact same
+    function body runs on the host (update below) and inside the fused
+    training-step Pallas kernel's epilogue.  Returns (new_p, new_m, new_v).
+    """
+    g = g.astype(jnp.float32)
+    m = c.b1 * m + c.one_minus_b1 * g
+    v = c.b2 * v + c.one_minus_b2 * jnp.square(g)
+    mhat = m / c.bc1
+    vhat = v / c.bc2
+    delta = mhat / (jnp.sqrt(vhat) + c.eps)
+    if weight_decay > 0.0:
+        delta = delta + weight_decay * p.astype(jnp.float32)
+    return (p - c.lr * delta).astype(p.dtype), m, v
+
+
 def update(cfg: AdamConfig, grads: PyTree, state: AdamState, params: PyTree
            ) -> tuple[PyTree, AdamState, dict[str, Array]]:
     """Returns (new_params, new_state, metrics)."""
@@ -63,37 +122,21 @@ def update(cfg: AdamConfig, grads: PyTree, state: AdamState, params: PyTree
         grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip_norm)
         metrics["grad_norm"] = gnorm
     step = state.step + 1
-    t = step.astype(jnp.float32)
-    lr = jnp.asarray(cfg.lr, jnp.float32)
-    if cfg.schedule is not None:
-        lr = lr * cfg.schedule(step)
-    metrics["lr"] = lr
-
-    b1, b2 = cfg.b1, cfg.b2
-    bc1 = 1.0 - b1 ** t
-    bc2 = 1.0 - b2 ** t
-
-    def upd(p, g, m, v):
-        g = g.astype(jnp.float32)
-        m = b1 * m + (1 - b1) * g
-        v = b2 * v + (1 - b2) * jnp.square(g)
-        mhat = m / bc1
-        vhat = v / bc2
-        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
-        if cfg.weight_decay > 0.0:
-            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
-        return (p - lr * delta).astype(p.dtype), m, v
+    c = step_constants(cfg, step)
+    metrics["lr"] = c.lr
 
     flat_p, treedef = jax.tree.flatten(params)
     flat_g = treedef.flatten_up_to(grads)
     flat_m = treedef.flatten_up_to(state.mu)
     flat_v = treedef.flatten_up_to(state.nu)
-    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    out = [leaf_update(p, g, m, v, c, weight_decay=cfg.weight_decay)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
     new_p = treedef.unflatten([o[0] for o in out])
     new_m = treedef.unflatten([o[1] for o in out])
     new_v = treedef.unflatten([o[2] for o in out])
     return new_p, AdamState(step=step, mu=new_m, nu=new_v), metrics
 
 
-__all__ = ["AdamConfig", "AdamState", "init", "update", "global_norm",
+__all__ = ["AdamConfig", "AdamState", "StepConstants", "init", "update",
+           "step_constants", "leaf_update", "global_norm",
            "clip_by_global_norm"]

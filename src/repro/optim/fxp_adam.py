@@ -40,13 +40,52 @@ def init(params: PyTree) -> fadam.AdamState:
     return fadam.init(params)
 
 
+def leaf_update(p, g, m, v, c: fadam.StepConstants, *,
+                fmt: fxp.QFormat = fxp.FXP32, weight_decay: float = 0.0,
+                ste: bool = True):
+    """One leaf of the fixed-point Adam step: project grad onto the Qm.f
+    lattice, run the float Adam math against precomputed `StepConstants`,
+    project the stored param.
+
+    This flat form is the single source of truth shared by the host path
+    (`update` below) and the fused training-step Pallas kernel's epilogue.
+    `ste=False` swaps `fake_quant` for the value-identical `project` (no
+    custom_vjp primitive) so kernel bodies can inline it; ste=True vs False
+    parity is pinned in tests/test_optim.py.  Returns (new_p, new_m, new_v).
+    """
+    proj = fxp.fake_quant if ste else fxp.project
+    g = proj(g.astype(jax.numpy.float32), fmt)
+    new_p, new_m, new_v = fadam.leaf_update(p, g, m, v, c,
+                                            weight_decay=weight_decay)
+    return proj(new_p, fmt), new_m, new_v
+
+
 def update(cfg: FxpAdamConfig, grads: PyTree, state: fadam.AdamState,
            params: PyTree) -> tuple[PyTree, fadam.AdamState, dict]:
     # gradient memory is fxp32 (§III) — project incoming grads first
     grads = jax.tree.map(lambda g: fxp.fake_quant(g, cfg.fmt), grads)
-    new_p, new_s, metrics = fadam.update(cfg, grads, state, params)
-    # weight memory is fxp32 — project the stored params
-    new_p = jax.tree.map(lambda p: fxp.fake_quant(p, cfg.fmt), new_p)
+    metrics: dict = {}
+    if cfg.grad_clip_norm is not None:
+        grads, gnorm = fadam.clip_by_global_norm(grads, cfg.grad_clip_norm)
+        metrics["grad_norm"] = gnorm
+    step = state.step + 1
+    c = fadam.step_constants(cfg, step)
+    metrics["lr"] = c.lr
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.mu)
+    flat_v = treedef.flatten_up_to(state.nu)
+    # grads were already projected above; leaf_update's own grad projection
+    # is idempotent on lattice values (power-of-2 scaling), so sharing the
+    # flat form costs nothing numerically.
+    out = [leaf_update(p, g, m, v, c, fmt=cfg.fmt,
+                       weight_decay=cfg.weight_decay)
+           for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    new_s = fadam.AdamState(step=step, mu=new_m, nu=new_v)
     if cfg.quantize_moments:
         new_s = fadam.AdamState(
             step=new_s.step,
@@ -56,4 +95,4 @@ def update(cfg: FxpAdamConfig, grads: PyTree, state: fadam.AdamState,
     return new_p, new_s, metrics
 
 
-__all__ = ["FxpAdamConfig", "init", "update"]
+__all__ = ["FxpAdamConfig", "init", "update", "leaf_update"]

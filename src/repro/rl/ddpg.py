@@ -34,7 +34,8 @@ from repro.core import fixedpoint as fxp
 from repro.core.qat import (FrozenQuant, QATContext, QATState, freeze_quant,
                             quantize_grads)
 from repro.kernels.fxp_matmul.ops import fxp_dense, fxp_dense_chain
-from repro.kernels.fxp_mlp.ops import fxp_mlp_infer, fxp_mlp_train
+from repro.kernels.fxp_mlp.ops import (fxp_mlp_infer, fxp_mlp_train,
+                                       fxp_mlp_train_step)
 from repro.optim import adam, fxp_adam
 from repro.rl.envs.base import EnvSpec
 
@@ -136,7 +137,9 @@ def _fused_mlp(params: Params, x: Array, ctx: Optional[QATContext],
 def _mlp_forward(params: Params, x: Array, ctx: Optional[QATContext],
                  *, sites: list[str], activations: tuple[str, ...],
                  backend: str) -> Array:
-    if backend == "pallas":
+    if backend in ("pallas", "pallas_fused_step"):
+        # the fused-step backend only changes how update() runs BP/WU; any
+        # plain forward (acting, evaluation) is the fused kernel either way
         return _fused_mlp(params, x, ctx, sites=sites, activations=activations)
     # half-precision dense is tied to activation quantization: with QAT off
     # there is no quantized phase, so the datapath stays full precision
@@ -309,6 +312,94 @@ def _wmean(x: Array, w: Optional[Array]) -> Array:
     return jnp.sum(x * w) / jnp.maximum(jnp.sum(w), 1.0)
 
 
+def _params_to_wb(params: Params, n: int) -> tuple[tuple, tuple]:
+    return (tuple(params[f"l{i}"]["w"] for i in range(n)),
+            tuple(params[f"l{i}"]["b"] for i in range(n)))
+
+
+def _wb_to_params(wb: tuple[tuple, tuple]) -> Params:
+    ws, bs = wb
+    return {f"l{i}": {"w": w, "b": b} for i, (w, b) in enumerate(zip(ws, bs))}
+
+
+def _update_fused_step(state: DDPGState, batch: dict[str, Array],
+                       cfg: DDPGConfig) -> tuple[DDPGState, dict[str, Array]]:
+    """The whole update in TWO Pallas launches (`fxp_mlp_train_step`):
+    critic fwd+bwd+Adam+soft-update resident in launch 1, actor ditto in
+    launch 2 — residuals in VMEM, gradients accumulated across batch
+    blocks in-kernel, moments/params/targets written in the epilogue.
+    Value semantics (losses, QAT range evolution, optimizer trajectory)
+    track `backend="pallas"`; parity is pinned in
+    tests/kernels/test_fxp_mlp_step.py.
+    """
+    obs, action = batch["obs"], batch["action"]
+    reward, next_obs = batch["reward"], batch["next_obs"]
+    done = batch["done"].astype(jnp.float32)
+    mask = batch.get("mask")
+    w = (jnp.ones((obs.shape[0],), jnp.float32) if mask is None
+         else mask.astype(jnp.float32))
+
+    qat_on = state.qat.config.enabled
+    if qat_on:
+        deltas, zs = QATContext(state.qat).site_quant_params(
+            ACTOR_SITES + CRITIC_SITES)
+    else:
+        deltas = zs = None
+
+    n = len(ACTOR_ACTS)
+    opt_cfg_c = (fxp_adam.FxpAdamConfig(lr=cfg.critic_lr) if cfg.fxp_weights
+                 else adam.AdamConfig(lr=cfg.critic_lr))
+    opt_cfg_a = (fxp_adam.FxpAdamConfig(lr=cfg.actor_lr) if cfg.fxp_weights
+                 else adam.AdamConfig(lr=cfg.actor_lr))
+    consts_c = adam.step_constants(opt_cfg_c, state.critic_opt.step + 1)
+    consts_a = adam.step_constants(opt_cfg_a, state.actor_opt.step + 1)
+
+    wb = lambda p: _params_to_wb(p, n)
+    out = fxp_mlp_train_step(
+        obs, action, reward, done, next_obs, w,
+        wb(state.actor), wb(state.critic),
+        wb(state.actor_target), wb(state.critic_target),
+        wb(state.actor_opt.mu), wb(state.actor_opt.nu),
+        wb(state.critic_opt.mu), wb(state.critic_opt.nu),
+        deltas, zs, consts_c, consts_a, state.qat.quantized_phase,
+        actor_acts=ACTOR_ACTS, critic_acts=CRITIC_ACTS,
+        obs_dim=int(obs.shape[-1]), act_dim=int(action.shape[-1]),
+        gamma=cfg.gamma, tau=cfg.tau, n_bits=state.qat.config.n_bits,
+        qat=qat_on, fxp32_phase1=state.qat.config.fxp32_phase1,
+        fxp_weights=cfg.fxp_weights)
+
+    # range-monitor evolution mirrors the two-context sequence of update():
+    # critic-loss pass observes the critic sites (-> qat1), actor-loss pass
+    # observes actor sites and the critic sites again on top of qat1
+    if qat_on:
+        ctx1 = QATContext(state.qat)
+        for j, site in enumerate(CRITIC_SITES):
+            ctx1.observe(site, out.c_mins[j], out.c_maxs[j])
+        ctx2 = QATContext(dataclasses.replace(ctx1.finalize()))
+        for j, site in enumerate(ACTOR_SITES + CRITIC_SITES):
+            ctx2.observe(site, out.a_mins[j], out.a_maxs[j])
+        qat_final = ctx2.finalize().tick()
+    else:
+        qat_final = state.qat.tick()
+
+    sum_w = jnp.maximum(jnp.sum(w), 1.0)
+    new_state = DDPGState(
+        actor=_wb_to_params(out.actor), critic=_wb_to_params(out.critic),
+        actor_target=_wb_to_params(out.actor_t),
+        critic_target=_wb_to_params(out.critic_t),
+        actor_opt=adam.AdamState(step=state.actor_opt.step + 1,
+                                 mu=_wb_to_params(out.actor_m),
+                                 nu=_wb_to_params(out.actor_v)),
+        critic_opt=adam.AdamState(step=state.critic_opt.step + 1,
+                                  mu=_wb_to_params(out.critic_m),
+                                  nu=_wb_to_params(out.critic_v)),
+        qat=qat_final, step=state.step + 1)
+    metrics = {"critic_loss": out.closs_sum / sum_w,
+               "actor_loss": -(out.q_sum / sum_w),
+               "q_mean": out.y_sum / sum_w}
+    return new_state, metrics
+
+
 def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
            ) -> tuple[DDPGState, dict[str, Array]]:
     """One FIXAR timestep's training work: critic BP/WU then actor BP/WU
@@ -327,11 +418,14 @@ def update(state: DDPGState, batch: dict[str, Array], cfg: DDPGConfig
     extrema; all-zero pad rows only widen a range that excludes 0, which
     mid-training activations essentially never do).
     """
+    if cfg.backend == "pallas_fused_step":
+        return _update_fused_step(state, batch, cfg)
     if cfg.backend not in ("jnp", "pallas"):
         raise ValueError(
             f"backend={cfg.backend!r} is forward/inference-only (the "
             "per-layer kernel chain has no autodiff rule); train with "
-            "backend='jnp' or backend='pallas'")
+            "backend='jnp', backend='pallas', or "
+            "backend='pallas_fused_step'")
     obs, action = batch["obs"], batch["action"]
     reward, next_obs = batch["reward"], batch["next_obs"]
     done = batch["done"].astype(jnp.float32)

@@ -5,10 +5,9 @@ Public API:
   CostModel / MODES — the per-batch fused/layer/jnp dispatch cost model
   BatcherConfig     — padding buckets, flush deadline, batch cap
 """
-from repro.serve.policy.batcher import (BatcherConfig, MicroBatcher,
-                                        PolicyFuture)
+
+from repro.serve.policy.batcher import BatcherConfig, MicroBatcher, PolicyFuture
 from repro.serve.policy.dispatch import MODES, CostModel
 from repro.serve.policy.engine import PolicyEngine
 
-__all__ = ["PolicyEngine", "CostModel", "MODES", "BatcherConfig",
-           "MicroBatcher", "PolicyFuture"]
+__all__ = ["PolicyEngine", "CostModel", "MODES", "BatcherConfig", "MicroBatcher", "PolicyFuture"]

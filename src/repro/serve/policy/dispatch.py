@@ -55,11 +55,14 @@ from repro.kernels.fxp_mlp.ops import fused_cost_hint
 
 MODES = ("fused", "layer", "jnp")
 # the modes a train-phase dispatch may pick: the per-layer chain is
-# forward-only (no autodiff rule), so it never enters a train argmin
-TRAIN_MODES = ("fused", "jnp")
+# forward-only (no autodiff rule), so it never enters a train argmin;
+# fused_step is the 2-launch whole-update kernel (fwd+bwd+Adam+soft-update
+# resident per loss) and is train-only — it has no acting face
+TRAIN_MODES = ("fused_step", "fused", "jnp")
 
 # maps a DDPG backend name (BENCH_fused_mlp.json's actor_ips keys) to a mode
-BACKEND_TO_MODE = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp"}
+BACKEND_TO_MODE = {"pallas": "fused", "pallas_layer": "layer", "jnp": "jnp",
+                   "pallas_fused_step": "fused_step"}
 
 
 def cost_hint(mode: str, dims: Sequence[int], phase: str = "act") -> dict:
@@ -74,6 +77,18 @@ def cost_hint(mode: str, dims: Sequence[int], phase: str = "act") -> dict:
     """
     if phase not in ("act", "train"):
         raise ValueError(f"unknown cost phase {phase!r}; 'act' | 'train'")
+    if mode == "fused_step":
+        if phase != "train":
+            raise ValueError(
+                "mode 'fused_step' is train-only (the whole-update kernel "
+                "has no acting face); use 'fused' for the act phase")
+        # one whole ddpg.update: 2 launches (critic step, actor step).  The
+        # FLOP axis stays per-loss-normalized (~3x a forward, same axis as
+        # 'fused') so the two modes' fitted rates are directly comparable;
+        # the second loss's MACs and the batch-independent Adam/soft-update
+        # epilogues fold into the fitted coefficients
+        return {"launches": 2, "flops_per_item": 3 * flops_per_item(dims),
+                "parallelism": "intra_batch"}
     if mode == "fused":
         return fused_cost_hint(dims, phase)
     if mode == "layer":
@@ -99,6 +114,10 @@ DEFAULT_COSTS = {
     "fused": ModeCost(per_launch_us=120.0, us_per_kflop=0.0010),
     "layer": ModeCost(per_launch_us=10.0, us_per_kflop=0.0045),
     "jnp": ModeCost(per_launch_us=45.0, us_per_kflop=0.0120),
+    # train-only whole-update kernel: fused's launch overhead minus the
+    # per-launch residual traffic it no longer pays, slightly better
+    # per-kflop rate (no HBM residual round-trip between fwd and bwd)
+    "fused_step": ModeCost(per_launch_us=110.0, us_per_kflop=0.0009),
 }
 
 

@@ -35,8 +35,10 @@ from repro.train.learner.batcher import (TRANSITION_KEYS, JoinedFuture,
                                          concat_batches, merge_chunk_metrics)
 
 # dispatch mode -> the ddpg backend that can actually train through it
-# (the per-layer chain has no autodiff rule, hence no "layer" entry)
-TRAIN_BACKENDS = {"fused": "pallas", "jnp": "jnp"}
+# (the per-layer chain has no autodiff rule, hence no "layer" entry);
+# fused_step is the 2-launch whole-update kernel (fwd+bwd+Adam+soft-update)
+TRAIN_BACKENDS = {"fused_step": "pallas_fused_step", "fused": "pallas",
+                  "jnp": "jnp"}
 
 # learner-shaped default buckets: update batches are replay-sized (tens to
 # hundreds of rows), never single observations

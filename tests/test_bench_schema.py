@@ -49,17 +49,25 @@ def test_fused_mlp_drift_fails():
         lambda d: d["train"].pop("ips_by_batch"),       # train fit input
         lambda d: d["train"]["ips_by_batch"].update(
             pallas={"128": 1.0}),                       # one batch only
+        lambda d: d["train"].pop("launches_per_update"),    # v4 launch table
+        lambda d: d["train"]["launches_per_update"].pop(
+            "pallas_fused_step"),                       # fused-step column
+        lambda d: d["train"]["updates_per_s"].pop(
+            "pallas_fused_step"),                       # fused-step column
+        lambda d: d["train"]["ips_by_batch"].pop(
+            "pallas_fused_step"),                       # fused-step column
+        lambda d: d["train"].update(speedup_vs_jnp=1.13),   # v3 scalar form
         lambda d: d["config"].update(net="17-400-300-6"),   # type drift
         lambda d: d["actor_ips_by_batch"].update(
             jnp={"256": 1.0}),                          # one batch only
-        lambda d: d.update(schema="fixar/fused_mlp_bench/v2"),  # old tag
+        lambda d: d.update(schema="fixar/fused_mlp_bench/v3"),  # old tag
     ):
         bad = copy.deepcopy(good)
         mutate(bad)
         with pytest.raises(bench_schema.SchemaError):
             bench_schema.validate_report(
                 bad, bench_schema.FUSED_MLP_SCHEMA
-                if bad.get("schema") != "fixar/fused_mlp_bench/v3"
+                if bad.get("schema") != "fixar/fused_mlp_bench/v4"
                 else None)
 
 

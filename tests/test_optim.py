@@ -68,3 +68,70 @@ def test_weight_decay_applies():
     st = adam.init(params)
     p2, _, _ = adam.update(cfg, {"x": jnp.array([0.0])}, st, params)
     assert float(p2["x"][0]) < 1.0  # decay shrinks even with zero grad
+
+
+def test_leaf_update_matches_update_bitwise():
+    """The flat `leaf_update` + `step_constants` form (what the fused
+    training-step kernel epilogue runs) is bit-identical to `adam.update`
+    over many steps — not approximately: the (1-b) complements are
+    precomputed once in double and cast, exactly as the inline form
+    constant-folded them."""
+    cfg = adam.AdamConfig(lr=3e-3)
+    params = {"x": jnp.linspace(-2.0, 2.0, 64)}
+    st = adam.init(params)
+    p_flat = params["x"]
+    m = jnp.zeros_like(p_flat)
+    v = jnp.zeros_like(p_flat)
+    for t in range(30):
+        g = {"x": jnp.sin(jnp.arange(64.0) + t)}
+        params, st, _ = adam.update(cfg, g, st, params)
+        c = adam.step_constants(cfg, jnp.int32(t + 1))
+        p_flat, m, v = adam.leaf_update(p_flat, g["x"], m, v, c)
+        assert jnp.array_equal(params["x"], p_flat)
+    assert jnp.array_equal(st.mu["x"], m)
+    assert jnp.array_equal(st.nu["x"], v)
+
+
+def test_fxp_leaf_update_ste_flag_value_parity():
+    """`ste=False` (fxp.project, kernel-safe: no custom_vjp primitive to
+    lower) is VALUE-identical to `ste=True` (fxp.fake_quant) — the flag only
+    changes the gradient rule, pinned here as promised by the docstring."""
+    cfg = fxp_adam.FxpAdamConfig(lr=5e-2)
+    c = adam.step_constants(cfg, jnp.int32(7))
+    p = jnp.linspace(-1.5, 1.5, 128)
+    g = jnp.cos(jnp.arange(128.0))
+    m = 0.1 * jnp.sin(jnp.arange(128.0))
+    v = 0.01 * jnp.abs(jnp.cos(jnp.arange(128.0)))
+    out_ste = fxp_adam.leaf_update(p, g, m, v, c, ste=True)
+    out_proj = fxp_adam.leaf_update(p, g, m, v, c, ste=False)
+    for a, b in zip(out_ste, out_proj):
+        assert jnp.array_equal(a, b)
+
+
+def test_fxp_leaf_update_lands_on_lattice():
+    """Whatever path computes it, the stored param is a Q15.16 lattice
+    point: scaling by 2^16 yields exact integers."""
+    cfg = fxp_adam.FxpAdamConfig(lr=5e-2)
+    c = adam.step_constants(cfg, jnp.int32(1))
+    p, _, _ = fxp_adam.leaf_update(
+        jnp.linspace(-1.0, 1.0, 64), jnp.ones((64,)),
+        jnp.zeros((64,)), jnp.zeros((64,)), c, ste=False)
+    scaled = p * (2.0 ** 16)
+    assert jnp.array_equal(scaled, jnp.round(scaled))
+
+
+def test_project_matches_fake_quant_everywhere():
+    """Direct pin of `fxp.project == fxp.fake_quant` values (promised in
+    core/fixedpoint.py): saturation edges, round-to-even ties, negatives,
+    and sub-quantum values all agree bitwise."""
+    from repro.core import fixedpoint as fxp
+
+    q = fxp.FXP32.scale
+    x = jnp.concatenate([
+        jnp.linspace(-40000.0, 40000.0, 1001),     # beyond both sat edges
+        jnp.array([0.5 * q, 1.5 * q, 2.5 * q,      # ties -> round-to-even
+                   -0.5 * q, -1.5 * q, 0.0, q, -q]),
+        jnp.linspace(-1e-6, 1e-6, 33),             # sub-quantum
+    ])
+    for fmt in (fxp.FXP32, fxp.FXP16):
+        assert jnp.array_equal(fxp.project(x, fmt), fxp.fake_quant(x, fmt))

@@ -158,8 +158,12 @@ def test_dispatcher_expected_mode_per_phase_and_batch():
     assert cm.choose(1, ACTOR_DIMS, phase="act") == "layer"
     assert cm.choose(512, ACTOR_DIMS, phase="act") == "fused"
     assert cm.choose(8, ACTOR_DIMS, phase="train") == "jnp"
-    assert cm.choose(32, ACTOR_DIMS, phase="train") == "fused"
-    assert cm.choose(128, ACTOR_DIMS, phase="train") == "fused"
+    assert cm.choose(32, ACTOR_DIMS, phase="train") == "fused_step"
+    assert cm.choose(128, ACTOR_DIMS, phase="train") == "fused_step"
+    # the 2-loss whole-update kernel still beats the custom-VJP pair when
+    # restricted to the pre-fused-step mode set
+    assert cm.choose(128, ACTOR_DIMS, modes=("fused", "jnp"),
+                     phase="train") == "fused"
     # train argmin never returns the autodiff-less per-layer chain
     for b in (1, 8, 32, 128, 512):
         assert cm.choose(b, ACTOR_DIMS, phase="train") in TRAIN_MODES
@@ -173,18 +177,24 @@ def test_dispatcher_expected_mode_per_phase_and_batch():
 def test_launches_carries_phase():
     assert CostModel.launches("fused", ACTOR_DIMS) == 1
     assert CostModel.launches("fused", ACTOR_DIMS, "train") == 2
+    assert CostModel.launches("fused_step", ACTOR_DIMS, "train") == 2
     assert CostModel.launches("layer", ACTOR_DIMS, "train") == \
         2 * (len(ACTOR_DIMS) - 1)
     with pytest.raises(ValueError):
         CostModel.launches("fused", ACTOR_DIMS, "serve")
+    # fused_step is train-only: it has no acting face to cost
+    with pytest.raises(ValueError, match="train-only"):
+        cost_hint("fused_step", ACTOR_DIMS, "act")
 
 
 def test_from_bench_train_fit_roundtrips(tmp_path):
     """Synthesize train-phase IPS from known affine coefficients and check
     the two-point fit recovers BOTH (overhead + rate) into train_costs,
     leaving the act fit untouched."""
-    truth = {"pallas": (100.0, 0.002), "jnp": (30.0, 0.010)}
-    mode_of = {"pallas": "fused", "jnp": "jnp"}
+    truth = {"pallas": (100.0, 0.002), "jnp": (30.0, 0.010),
+             "pallas_fused_step": (80.0, 0.0015)}
+    mode_of = {"pallas": "fused", "jnp": "jnp",
+               "pallas_fused_step": "fused_step"}
     by_batch = {}
     for backend, (per_launch, rate) in truth.items():
         hint = cost_hint(mode_of[backend], ACTOR_DIMS, "train")
@@ -216,12 +226,13 @@ def test_from_bench_train_single_point_fallback(tmp_path):
     bench = {"config": {"batch": 256, "net": ACTOR_DIMS},
              "actor_ips": {}, "actor_ips_by_batch": {},
              "train": {"batch": 128,
-                       "updates_per_s": {"pallas": 50.0, "jnp": 40.0}}}
+                       "updates_per_s": {"pallas": 50.0, "jnp": 40.0,
+                                         "pallas_fused_step": 70.0}}}
     path = tmp_path / "bench.json"
     path.write_text(json.dumps(bench))
     cm = CostModel.from_bench(path)
-    assert set(cm.train_costs) == {"fused", "jnp"}
-    for mode in ("fused", "jnp"):
+    assert set(cm.train_costs) == {"fused", "fused_step", "jnp"}
+    for mode in ("fused", "fused_step", "jnp"):
         assert cm.train_costs[mode].per_launch_us == \
             DEFAULT_COSTS[mode].per_launch_us
         assert cm.train_costs[mode].us_per_kflop > 0
