@@ -136,38 +136,49 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
     # traced + audited: registry-backed stats, predicted-vs-measured
     # audit per update, QAT range/saturation probes off the live state
     from repro.obs import Observability
-    obsb = Observability.tracing(qat_probe_every=2)
+    # trace path decided up front so the tracer self-flushes on close():
+    # an aborted bench still leaves its (partial) trace on disk
+    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
+        / "trace_learner.jsonl"
+    trace_path.parent.mkdir(parents=True, exist_ok=True)
+    obsb = Observability.tracing(trace_path=str(trace_path),
+                                 qat_probe_every=2)
     eng = LearnerEngine.from_ddpg(
         state, cfg, cost_model=cm,
         batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0),
         obs=obsb)
-    eng.warmup(padded=True)
-    eng.load_state(state)
-    eng.reset_stats()
-    n_prod, per_prod = (2, 3) if smoke else ((3, 6) if quick else (6, 16))
-    eng.start()
+    try:
+        eng.warmup(padded=True)
+        eng.load_state(state)
+        eng.reset_stats()
+        n_prod, per_prod = (2, 3) if smoke \
+            else ((3, 6) if quick else (6, 16))
+        eng.start()
 
-    def producer(k):
-        prng = np.random.default_rng(k)
-        futs = [eng.submit(_replay_batch(prng,
-                                         int(prng.integers(2, buckets[1])),
-                                         dims[0], dims[-1]))
-                for _ in range(per_prod)]
-        for f in futs:
-            f.result(timeout=300.0)
+        def producer(k):
+            prng = np.random.default_rng(k)
+            futs = [eng.submit(
+                        _replay_batch(prng,
+                                      int(prng.integers(2, buckets[1])),
+                                      dims[0], dims[-1]))
+                    for _ in range(per_prod)]
+            for f in futs:
+                f.result(timeout=300.0)
 
-    threads = [threading.Thread(target=producer, args=(k,))
-               for k in range(n_prod)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    eng.stop()
-    # one explicit range+saturation probe so qat_telemetry is populated
-    # even on runs too short for the qat_probe_every cadence to fire
-    eng.record_qat_telemetry(
-        _replay_batch(rng, buckets[0], dims[0], dims[-1]))
-    st = eng.stats()
+        threads = [threading.Thread(target=producer, args=(k,))
+                   for k in range(n_prod)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        eng.stop()
+        # one explicit range+saturation probe so qat_telemetry is
+        # populated even on runs too short for qat_probe_every to fire
+        eng.record_qat_telemetry(
+            _replay_batch(rng, buckets[0], dims[0], dims[-1]))
+        st = eng.stats()
+    finally:
+        eng.close()     # idempotent stop + tracer flush to trace_path
     report["adaptive"] = {
         "requests": st["requests"],
         "updates": st["updates"],
@@ -194,13 +205,9 @@ def bench_learner(quick: bool = False, smoke: bool = False) -> dict:
     target = SMOKE_DIR / LEARNER_JSON.name if smoke else LEARNER_JSON
     target.parent.mkdir(parents=True, exist_ok=True)
     target.write_text(json.dumps(report, indent=2) + "\n")
-    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
-        / "trace_learner.jsonl"
-    trace_path.parent.mkdir(parents=True, exist_ok=True)
-    trace = obsb.tracer.write(trace_path)
     emit("train/learner/json", 0.0, f"wrote={target.relative_to(_REPO)}")
     emit("train/learner/trace", 0.0,
-         f"wrote={pathlib.Path(trace).relative_to(_REPO)}")
+         f"wrote={trace_path.relative_to(_REPO)}")
     return report
 
 

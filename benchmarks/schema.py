@@ -345,21 +345,83 @@ def validate_file(path) -> str:
     return data["schema"]
 
 
+# Chrome trace-event JSONL (what `obs.Tracer.write`/`flush` emit and the
+# benches drop next to their JSON artifacts): every line one JSON object,
+# only complete ("X") and instant ("i") phases — a by-construction
+# guarantee that no span is left unclosed — with the keys Perfetto needs.
+_TRACE_PHASES = {"X", "i"}
+_TRACE_REQUIRED = ("name", "ph", "ts", "pid", "tid")
+
+
+def validate_trace_event(ev: dict, where: str = "event") -> None:
+    """One trace event: required keys, known phase, sane timestamps."""
+    if not isinstance(ev, dict):
+        raise SchemaError(f"{where}: expected object, got "
+                          f"{type(ev).__name__}")
+    for key in _TRACE_REQUIRED:
+        if key not in ev:
+            raise SchemaError(f"{where}: missing required key {key!r}")
+    if ev["ph"] not in _TRACE_PHASES:
+        raise SchemaError(f"{where}: phase {ev['ph']!r} not in "
+                          f"{sorted(_TRACE_PHASES)} — an unclosed or "
+                          f"async span leaked into the trace")
+    if not isinstance(ev["ts"], (int, float)) or isinstance(ev["ts"], bool):
+        raise SchemaError(f"{where}: ts must be a number")
+    if ev["ph"] == "X":
+        dur = ev.get("dur")
+        if not isinstance(dur, (int, float)) or isinstance(dur, bool):
+            raise SchemaError(f"{where}: complete event needs numeric dur")
+        if dur < 0:
+            raise SchemaError(f"{where}: negative duration {dur}")
+
+
+def validate_trace_file(path, min_events: int = 1) -> int:
+    """Validate a trace JSONL file; returns the event count.  Fails on
+    unparsable lines, unknown phases, missing keys, negative durations,
+    or fewer than `min_events` events (an empty trace from an
+    instrumented run means the tracer was silently disabled)."""
+    n = 0
+    with open(path) as fh:
+        for i, line in enumerate(fh, 1):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                ev = json.loads(line)
+            except json.JSONDecodeError as err:
+                raise SchemaError(f"line {i}: not valid JSON: {err}") \
+                    from err
+            validate_trace_event(ev, f"line {i}")
+            n += 1
+    if n < min_events:
+        raise SchemaError(f"only {n} events (< {min_events}); the traced "
+                          f"run produced no spans")
+    return n
+
+
 def main(argv=None) -> int:
     argv = list(sys.argv[1:] if argv is None else argv)
-    if argv[:1] == ["--check"]:
+    trace_mode = False
+    if argv[:1] == ["--check-trace"]:
+        trace_mode, argv = True, argv[1:]
+    elif argv[:1] == ["--check"]:
         argv = argv[1:]
     if not argv:
-        print("usage: python -m benchmarks.schema --check FILE [FILE...]",
-              file=sys.stderr)
+        print("usage: python -m benchmarks.schema --check FILE [FILE...]\n"
+              "       python -m benchmarks.schema --check-trace "
+              "TRACE.jsonl [TRACE.jsonl...]", file=sys.stderr)
         return 2
     for path in argv:
         try:
-            tag = validate_file(path)
+            if trace_mode:
+                n = validate_trace_file(path)
+                print(f"ok {path} ({n} trace events)")
+            else:
+                tag = validate_file(path)
+                print(f"ok {path} ({tag})")
         except (OSError, json.JSONDecodeError, SchemaError) as err:
             print(f"FAIL {path}: {err}", file=sys.stderr)
             return 1
-        print(f"ok {path} ({tag})")
     return 0
 
 

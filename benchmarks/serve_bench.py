@@ -119,34 +119,44 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
     # traced + audited: the registry backs stats(), every batch feeds the
     # predicted-vs-measured audit, and the QAT probe samples saturation
     from repro.obs import Observability
-    obsb = Observability.tracing(qat_probe_every=2)
+    # trace path decided up front so the tracer self-flushes on close():
+    # an aborted bench still leaves its (partial) trace on disk
+    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
+        / "trace_serve.jsonl"
+    trace_path.parent.mkdir(parents=True, exist_ok=True)
+    obsb = Observability.tracing(trace_path=str(trace_path),
+                                 qat_probe_every=2)
     eng = PolicyEngine.from_ddpg(
         state, batcher=BatcherConfig(buckets=buckets, max_wait_ms=2.0),
         obs=obsb)
-    eng.warmup(buckets=(8, 32), modes=("layer",))
-    eng.warmup(buckets=tuple(b for b in (128, big) if b in buckets),
-               modes=("fused",))
-    eng.reset_stats()
-    n_clients, per_client = (2, 4) if smoke else ((4, 8) if quick else (8, 32))
-    eng.start()
+    try:
+        eng.warmup(buckets=(8, 32), modes=("layer",))
+        eng.warmup(buckets=tuple(b for b in (128, big) if b in buckets),
+                   modes=("fused",))
+        eng.reset_stats()
+        n_clients, per_client = (2, 4) if smoke \
+            else ((4, 8) if quick else (8, 32))
+        eng.start()
 
-    def client(k):
-        futs = [eng.submit(obs_big[(k + i) % big])
-                for i in range(per_client)]
-        for f in futs:
-            f.result(timeout=120.0)
+        def client(k):
+            futs = [eng.submit(obs_big[(k + i) % big])
+                    for i in range(per_client)]
+            for f in futs:
+                f.result(timeout=120.0)
 
-    threads = [threading.Thread(target=client, args=(k,))
-               for k in range(n_clients)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    eng.stop()
-    # one explicit probe so qat_telemetry is populated even on runs too
-    # short for the qat_probe_every cadence to fire
-    eng.record_qat_telemetry(obs_big[:buckets[1]], rows=buckets[1])
-    st = eng.stats()
+        threads = [threading.Thread(target=client, args=(k,))
+                   for k in range(n_clients)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        eng.stop()
+        # one explicit probe so qat_telemetry is populated even on runs
+        # too short for the qat_probe_every cadence to fire
+        eng.record_qat_telemetry(obs_big[:buckets[1]], rows=buckets[1])
+        st = eng.stats()
+    finally:
+        eng.close()     # idempotent stop + tracer flush to trace_path
     report["adaptive"] = {
         "requests": st["requests"],
         "ips_wall": st["ips_wall"],
@@ -169,13 +179,9 @@ def bench_serve_policy(quick: bool = False, smoke: bool = False) -> dict:
     target = SMOKE_DIR / SERVE_JSON.name if smoke else SERVE_JSON
     target.parent.mkdir(parents=True, exist_ok=True)
     target.write_text(json.dumps(report, indent=2) + "\n")
-    trace_path = (SMOKE_DIR if smoke else _REPO / "results" / "bench") \
-        / "trace_serve.jsonl"
-    trace_path.parent.mkdir(parents=True, exist_ok=True)
-    trace = obsb.tracer.write(trace_path)
     emit("serve/policy/json", 0.0, f"wrote={target.relative_to(_REPO)}")
     emit("serve/policy/trace", 0.0,
-         f"wrote={pathlib.Path(trace).relative_to(_REPO)}")
+         f"wrote={trace_path.relative_to(_REPO)}")
     return report
 
 

@@ -19,13 +19,14 @@ and the audit exposes
     average can no longer be trusted to rank them) — the signal to re-run
     `benchmarks/kernel_bench` and refit via `CostModel.from_bench`.
 """
+
 from __future__ import annotations
 
 import math
 import threading
 from typing import Sequence
 
-_EPS_US = 1e-3   # 1 ns floor: keeps log ratios finite on degenerate clocks
+_EPS_US = 1e-3  # 1 ns floor: keeps log ratios finite on degenerate clocks
 
 
 class DispatchAudit:
@@ -35,8 +36,15 @@ class DispatchAudit:
     engine that is #phases x #modes x #buckets, single digits.
     """
 
-    def __init__(self, cost_model, dims: Sequence[int], *,
-                 threshold: float = 3.0):
+    def __init__(
+        self,
+        cost_model,
+        dims: Sequence[int],
+        *,
+        threshold: float = 3.0,
+        registry=None,
+        prefix: str = "dispatch_audit",
+    ):
         self.cost_model = cost_model
         self.dims = list(dims)
         self.threshold = float(threshold)
@@ -44,14 +52,19 @@ class DispatchAudit:
         # (phase, mode, bucket) -> [n, sum_measured_us, sum_log_ratio,
         #                           predicted_us]
         self._cells: dict[tuple[str, str, int], list] = {}
+        # optional registry mirror: the drift verdict as gauges, so fleet
+        # aggregation and SLO rules (`*.dispatch_audit.stale`) see which
+        # HOST's calibration went bad without asking each engine directly
+        self._g_drift = self._g_stale = None
+        if registry is not None:
+            self._g_drift = registry.gauge(f"{prefix}.drift_factor")
+            self._g_stale = registry.gauge(f"{prefix}.stale")
+            self._g_stale.set(0.0)
 
-    def record(self, phase: str, mode: str, bucket: int,
-               measured_s: float) -> None:
-        predicted_us = self.cost_model.estimate_us(mode, bucket, self.dims,
-                                                   phase)
+    def record(self, phase: str, mode: str, bucket: int, measured_s: float) -> None:
+        predicted_us = self.cost_model.estimate_us(mode, bucket, self.dims, phase)
         measured_us = measured_s * 1e6
-        log_ratio = math.log(max(measured_us, _EPS_US)
-                             / max(predicted_us, _EPS_US))
+        log_ratio = math.log(max(measured_us, _EPS_US) / max(predicted_us, _EPS_US))
         key = (phase, mode, int(bucket))
         with self._lock:
             cell = self._cells.get(key)
@@ -61,6 +74,10 @@ class DispatchAudit:
             cell[1] += measured_us
             cell[2] += log_ratio
             cell[3] = predicted_us
+        if self._g_drift is not None:
+            d = self.drift()  # O(#cells): single digits per engine
+            self._g_drift.set(d["drift_factor"])
+            self._g_stale.set(1.0 if d["stale"] else 0.0)
 
     def table(self) -> dict:
         """``{phase: {mode: {bucket: {n, predicted_us, measured_us,
@@ -68,8 +85,7 @@ class DispatchAudit:
         with self._lock:
             cells = {k: list(v) for k, v in self._cells.items()}
         out: dict = {}
-        for (phase, mode, bucket), (n, meas_sum, _, pred) in \
-                sorted(cells.items()):
+        for (phase, mode, bucket), (n, meas_sum, _, pred) in sorted(cells.items()):
             mean_us = meas_sum / n
             out.setdefault(phase, {}).setdefault(mode, {})[str(bucket)] = {
                 "n": n,
@@ -85,17 +101,18 @@ class DispatchAudit:
             cells = [list(v) for v in self._cells.values()]
         total = sum(c[0] for c in cells)
         if total == 0:
-            return {"drift_factor": None, "stale": False,
-                    "threshold": self.threshold, "batches": 0}
+            return {"drift_factor": None, "stale": False, "threshold": self.threshold, "batches": 0}
         # per-cell mean log-ratio first (so a hot cell doesn't let noise
         # from its individual batches masquerade as calibration error),
         # then weight cells by batch count
         weighted = sum(c[0] * abs(c[2] / c[0]) for c in cells) / total
         factor = math.exp(weighted)
-        return {"drift_factor": factor,
-                "stale": factor > self.threshold,
-                "threshold": self.threshold,
-                "batches": total}
+        return {
+            "drift_factor": factor,
+            "stale": factor > self.threshold,
+            "threshold": self.threshold,
+            "batches": total,
+        }
 
     def snapshot(self) -> dict:
         """drift() + table() in one dict — the engines' `stats()` section
@@ -107,6 +124,9 @@ class DispatchAudit:
     def reset(self) -> None:
         with self._lock:
             self._cells.clear()
+        if self._g_drift is not None:
+            self._g_drift.reset()
+            self._g_stale.set(0.0)
 
 
 __all__ = ["DispatchAudit"]

@@ -12,6 +12,7 @@ engines** (``{"act": {mode: n}}`` / ``{"train": {mode: n}}``) — the serve
 engine used to emit a flat map while the learner phase-keyed its bench
 copy; one key shape means fleet aggregation can merge them blindly.
 """
+
 from __future__ import annotations
 
 import time
@@ -29,8 +30,15 @@ class EngineMetrics:
     gauges, and one counter per ``dispatch.<phase>.<mode>``.
     """
 
-    def __init__(self, registry: MetricsRegistry, *, prefix: str,
-                 phase: str, items_name: str, calls_name: str):
+    def __init__(
+        self,
+        registry: MetricsRegistry,
+        *,
+        prefix: str,
+        phase: str,
+        items_name: str,
+        calls_name: str,
+    ):
         self.registry = registry
         self.prefix = prefix
         self.phase = phase
@@ -55,8 +63,7 @@ class EngineMetrics:
         """First-submit wall-clock anchor (idempotent)."""
         self._t_first.set_once(time.perf_counter())
 
-    def record_call(self, items: int, bucket: int, mode: str,
-                    device_s: float) -> None:
+    def record_call(self, items: int, bucket: int, mode: str, device_s: float) -> None:
         """One dispatched device call: `items` real rows padded to
         `bucket`, served by `mode` in `device_s` seconds."""
         self._items.inc(items)
@@ -66,18 +73,19 @@ class EngineMetrics:
         c = self._modes.get(mode)
         if c is None:
             c = self._modes[mode] = self.registry.counter(
-                f"{self.prefix}.dispatch.{self.phase}.{mode}")
+                f"{self.prefix}.dispatch.{self.phase}.{mode}"
+            )
         c.inc()
 
-    def record_replies(self, n: int, latencies_s: Iterable[float],
-                       t_done: Optional[float] = None) -> None:
+    def record_replies(
+        self, n: int, latencies_s: Iterable[float], t_done: Optional[float] = None
+    ) -> None:
         """`n` requests resolved; their submit->reply latencies stream
         into the histogram."""
         self._requests.inc(n)
         for lat in latencies_s:
             self._latency.observe(lat)
-        self._t_last.set(t_done if t_done is not None
-                         else time.perf_counter())
+        self._t_last.set(t_done if t_done is not None else time.perf_counter())
 
     # ------------------------------------------------------------------ #
     # reading
@@ -113,14 +121,20 @@ class EngineMetrics:
 
     def mode_histogram(self) -> dict[str, dict[str, int]]:
         """Phase-keyed dispatch histogram: ``{phase: {mode: n}}``."""
-        return {self.phase: {mode: c.value
-                             for mode, c in sorted(self._modes.items())
-                             if c.value}}
+        return {self.phase: {mode: c.value for mode, c in sorted(self._modes.items()) if c.value}}
 
     def reset(self) -> None:
-        for m in (self._requests, self._items, self._calls, self._device_s,
-                  self._occupancy, self._latency, self._t_first,
-                  self._t_last, *self._modes.values()):
+        for m in (
+            self._requests,
+            self._items,
+            self._calls,
+            self._device_s,
+            self._occupancy,
+            self._latency,
+            self._t_first,
+            self._t_last,
+            *self._modes.values(),
+        ):
             m.reset()
 
 

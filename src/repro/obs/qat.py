@@ -24,6 +24,7 @@ current bitwidth — the precursor of quantization-induced return collapse.
 The probe itself lives in `rl/ddpg.actor_site_telemetry` (it needs the
 network structure); this module only aggregates.
 """
+
 from __future__ import annotations
 
 import math
@@ -72,7 +73,7 @@ class QATTelemetry:
     def __init__(self, registry, prefix: str = "qat"):
         self.registry = registry
         self.prefix = prefix
-        self._sites: dict[str, dict] = {}   # site -> metric handles
+        self._sites: dict[str, dict] = {}  # site -> metric handles
 
     def _handles(self, site: str) -> dict:
         h = self._sites.get(site)
@@ -88,12 +89,14 @@ class QATTelemetry:
                 # buckets meaningful, exact zeros land in the underflow
                 # bucket and quantile-clamp back to 0.0
                 "saturation": self.registry.histogram(
-                    f"{p}.saturation", lo=1e-6, hi=2.0, growth=1.25),
+                    f"{p}.saturation", lo=1e-6, hi=2.0, growth=1.25
+                ),
             }
         return h
 
-    def record_range(self, site: str, a_min: float, a_max: float,
-                     count: Optional[int] = None) -> None:
+    def record_range(
+        self, site: str, a_min: float, a_max: float, count: Optional[int] = None
+    ) -> None:
         """Install a site's (frozen or finalized) quantization range."""
         h = self._handles(site)
         h["a_min"].set(float(a_min))
@@ -101,8 +104,7 @@ class QATTelemetry:
         if count is not None:
             h["count"].set(int(count))
 
-    def record_probe(self, site: str, act_min: float, act_max: float,
-                     saturation: float) -> None:
+    def record_probe(self, site: str, act_min: float, act_max: float, saturation: float) -> None:
         """Fold one probe's observed extrema + saturation rate for a
         site (latest extrema win; saturation streams into the
         histogram)."""

@@ -20,6 +20,7 @@ Disabled tracing costs one attribute check and a shared no-op context
 manager per span site — no event dicts, no timestamps, no lock traffic —
 which is what lets the engines keep their spans inline on the hot path.
 """
+
 from __future__ import annotations
 
 import json
@@ -61,8 +62,7 @@ class _Span:
         return self
 
     def __exit__(self, *exc) -> bool:
-        self._tracer._record(self.name, self.cat, self._t0,
-                             self._tracer._clock(), self.args)
+        self._tracer._record(self.name, self.cat, self._t0, self._tracer._clock(), self.args)
         return False
 
     def set(self, **args) -> None:
@@ -82,12 +82,28 @@ class Tracer:
     `max_events` caps memory (oldest-first drop is wrong for traces, so we
     drop *new* events once full and count them in `dropped`); the default
     holds hours of engine traffic.
+
+    `path` (optional) makes the tracer self-flushing: `flush()` (and
+    therefore `close()`, `__exit__`, and every engine's `close()`) writes
+    the collected events there, so an aborted run still lands its trace on
+    disk instead of losing it to the exception.  Use the tracer as a
+    context manager around the traced workload::
+
+        with Tracer(path="trace.jsonl") as tracer:
+            ... traced work; may raise ...
+        # trace.jsonl written either way
     """
 
-    def __init__(self, enabled: bool = True, max_events: int = 1_000_000,
-                 clock=time.perf_counter):
+    def __init__(
+        self,
+        enabled: bool = True,
+        max_events: int = 1_000_000,
+        clock=time.perf_counter,
+        path=None,
+    ):
         self.enabled = enabled
         self.max_events = max_events
+        self.path = path
         self._clock = clock
         self._t0 = clock()
         self._pid = os.getpid()
@@ -100,8 +116,9 @@ class Tracer:
             return _NULL_SPAN
         return _Span(self, name, cat, args)
 
-    def complete(self, name: str, t_start: float, t_end: float,
-                 cat: str = "engine", **args) -> None:
+    def complete(
+        self, name: str, t_start: float, t_end: float, cat: str = "engine", **args
+    ) -> None:
         """Record a span from explicit perf_counter endpoints."""
         if not self.enabled:
             return
@@ -111,19 +128,29 @@ class Tracer:
         if not self.enabled:
             return
         now = self._clock()
-        ev = {"name": name, "cat": cat, "ph": "i", "s": "t",
-              "ts": round((now - self._t0) * 1e6, 3),
-              "pid": self._pid, "tid": threading.get_ident()}
+        ev = {
+            "name": name,
+            "cat": cat,
+            "ph": "i",
+            "s": "t",
+            "ts": round((now - self._t0) * 1e6, 3),
+            "pid": self._pid,
+            "tid": threading.get_ident(),
+        }
         if args:
             ev["args"] = args
         self._append(ev)
 
-    def _record(self, name: str, cat: str, t0: float, t1: float,
-                args: dict) -> None:
-        ev = {"name": name, "cat": cat, "ph": "X",
-              "ts": round((t0 - self._t0) * 1e6, 3),
-              "dur": round(max(t1 - t0, 0.0) * 1e6, 3),
-              "pid": self._pid, "tid": threading.get_ident()}
+    def _record(self, name: str, cat: str, t0: float, t1: float, args: dict) -> None:
+        ev = {
+            "name": name,
+            "cat": cat,
+            "ph": "X",
+            "ts": round((t0 - self._t0) * 1e6, 3),
+            "dur": round(max(t1 - t0, 0.0) * 1e6, 3),
+            "pid": self._pid,
+            "tid": threading.get_ident(),
+        }
         if args:
             ev["args"] = args
         self._append(ev)
@@ -153,6 +180,27 @@ class Tracer:
             for ev in events:
                 fh.write(json.dumps(ev) + "\n")
         return str(path)
+
+    def flush(self) -> "str | None":
+        """Write to the construction-time `path` (None when no path was
+        configured or the tracer is disabled).  Idempotent — safe to call
+        from several shutdown paths (engine close, bundle close, finally
+        blocks); each call rewrites the full trace."""
+        if self.path is None or not self.enabled:
+            return None
+        return self.write(self.path)
+
+    def close(self) -> None:
+        """Flush (when a path is configured) and stop accepting events."""
+        self.flush()
+        self.enabled = False
+
+    def __enter__(self) -> "Tracer":
+        return self
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
 
 
 # the one shared disabled tracer — engines default to it, so untraced

@@ -146,7 +146,7 @@ def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
 
 
 def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
-               learner=None, tracer=None
+               learner=None, tracer=None, observability=None
                ) -> tuple[TrainState, dict[str, Any]]:
     """Paper-faithful host loop with the Fig.-9 timing breakdown.
 
@@ -165,7 +165,17 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
     emits its Fig.-9 segments as spans (`loop.act` / `loop.env` /
     `loop.replay` / `loop.update`) — layered over a learner's own engine
     spans, this is the full host-loop picture in one Perfetto timeline.
+
+    `observability` (optional) is an `obs.Observability` bundle: its
+    tracer is used when `tracer` isn't given, its HTTP endpoint
+    (`serve_http=port`) is started so the loop's host serves /metrics +
+    /healthz while training, and the tracer is flushed on exit — normal
+    or aborted — so the trace always lands on disk.
     """
+    if observability is not None:
+        if tracer is None:
+            tracer = observability.tracer
+        observability.ensure_server()
     ts = init_train_state(env, cfg, dcfg)
     act_jit = jax.jit(partial(ddpg.act, cfg=dcfg))
     upd_jit = jax.jit(partial(ddpg.update, cfg=dcfg))
@@ -177,55 +187,61 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
     times = {"env": 0.0, "runtime": 0.0, "accelerator": 0.0}
     key = ts.key
     agent, env_state, obs, buf = ts.agent, ts.env_state, ts.obs, ts.buf
-    for step in range(cfg.total_steps):
-        key, k_noise, k_sample = jax.random.split(key, 3)
+    try:
+        for step in range(cfg.total_steps):
+            key, k_noise, k_sample = jax.random.split(key, 3)
 
-        t0 = time.perf_counter()
-        action = act_jit(agent, obs, noise_key=k_noise)
-        jax.block_until_ready(action)
-        t1 = time.perf_counter()
+            t0 = time.perf_counter()
+            action = act_jit(agent, obs, noise_key=k_noise)
+            jax.block_until_ready(action)
+            t1 = time.perf_counter()
 
-        env_state, next_obs, reward, done = auto_reset(env, env_state,
-                                                       action[0])
-        jax.block_until_ready(next_obs)
-        t2 = time.perf_counter()
+            env_state, next_obs, reward, done = auto_reset(env, env_state,
+                                                           action[0])
+            jax.block_until_ready(next_obs)
+            t2 = time.perf_counter()
 
-        # replay add + batch sample + "PCIe import" (device transfer)
-        buf = add_jit(buf, obs, action, reward[None], next_obs[None],
-                      done[None])
-        batch = sample_jit(buf, k_sample)
-        if learner is None:
-            batch = jax.device_put(batch)
-        else:
-            # the learner's queue holds HOST arrays (its "PCIe import"
-            # happens inside run_update and is billed to the accelerator
-            # segment there) — pulling to host here, instead of a
-            # device_put the engine would immediately undo, keeps the
-            # timing breakdown honest and skips a wasted round trip
-            batch = jax.device_get(batch)
-        jax.block_until_ready(batch)
-        t3 = time.perf_counter()
-
-        if int(buf.size) >= cfg.warmup_steps:
-            if learner is not None:
-                learner.run_update(batch)        # blocks until applied
-                agent = learner.state
+            # replay add + batch sample + "PCIe import" (device transfer)
+            buf = add_jit(buf, obs, action, reward[None], next_obs[None],
+                          done[None])
+            batch = sample_jit(buf, k_sample)
+            if learner is None:
+                batch = jax.device_put(batch)
             else:
-                agent, _ = upd_jit(agent, batch)
-                jax.block_until_ready(agent.step)
-        t4 = time.perf_counter()
+                # the learner's queue holds HOST arrays (its "PCIe import"
+                # happens inside run_update and is billed to the
+                # accelerator segment there) — pulling to host here,
+                # instead of a device_put the engine would immediately
+                # undo, keeps the timing breakdown honest and skips a
+                # wasted round trip
+                batch = jax.device_get(batch)
+            jax.block_until_ready(batch)
+            t3 = time.perf_counter()
 
-        times["accelerator"] += (t1 - t0) + (t4 - t3)
-        times["env"] += t2 - t1
-        times["runtime"] += t3 - t2
-        if tracer is not None and tracer.enabled:
-            tracer.complete("loop.act", t0, t1, cat="loop", step=step)
-            tracer.complete("loop.env", t1, t2, cat="loop", step=step)
-            tracer.complete("loop.replay", t2, t3, cat="loop", step=step)
-            if t4 > t3:
-                tracer.complete("loop.update", t3, t4, cat="loop",
+            if int(buf.size) >= cfg.warmup_steps:
+                if learner is not None:
+                    learner.run_update(batch)    # blocks until applied
+                    agent = learner.state
+                else:
+                    agent, _ = upd_jit(agent, batch)
+                    jax.block_until_ready(agent.step)
+            t4 = time.perf_counter()
+
+            times["accelerator"] += (t1 - t0) + (t4 - t3)
+            times["env"] += t2 - t1
+            times["runtime"] += t3 - t2
+            if tracer is not None and tracer.enabled:
+                tracer.complete("loop.act", t0, t1, cat="loop", step=step)
+                tracer.complete("loop.env", t1, t2, cat="loop", step=step)
+                tracer.complete("loop.replay", t2, t3, cat="loop",
                                 step=step)
-        obs = next_obs[None]
+                if t4 > t3:
+                    tracer.complete("loop.update", t3, t4, cat="loop",
+                                    step=step)
+            obs = next_obs[None]
+    finally:
+        if observability is not None:
+            observability.flush()
 
     ts = TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, key=key)
     return ts, {"times": times, "total_steps": cfg.total_steps}

@@ -26,7 +26,7 @@ from typing import Callable, Optional
 
 @dataclasses.dataclass
 class HostState:
-    host_id: int
+    host_id: "int | str"
     last_beat: float = 0.0
     step_time_ema: float = 0.0
     beats: int = 0
@@ -61,7 +61,19 @@ class HeartbeatRegistry:
             self._m_alive = metrics.gauge(f"{prefix}.hosts_alive")
             self._m_alive.set(len(self.hosts))
 
-    def beat(self, host_id: int, step_time_s: Optional[float] = None):
+    def ensure_host(self, host_id) -> HostState:
+        """Register a host on first sight (fleet membership is dynamic:
+        `obs/aggregate.FleetAggregator` learns hosts from the snapshots
+        they ship, not from a static count).  Idempotent; host ids may be
+        ints (the simulated-cluster form) or strings (`hostname:pid`)."""
+        h = self.hosts.get(host_id)
+        if h is None:
+            h = self.hosts[host_id] = HostState(host_id)
+            if self._metrics is not None:
+                self._m_alive.set(len(self.hosts))
+        return h
+
+    def beat(self, host_id, step_time_s: Optional[float] = None):
         h = self.hosts[host_id]
         h.last_beat = self.clock()
         h.beats += 1

@@ -95,7 +95,9 @@ class PolicyEngine:
                                       phase="act", items_name="actions",
                                       calls_name="batches")
         self._audit = DispatchAudit(self.cost_model, self.dims,
-                                    threshold=self.obs.audit_threshold)
+                                    threshold=self.obs.audit_threshold,
+                                    registry=self.obs.registry,
+                                    prefix="serve.dispatch_audit")
         self._qat = QATTelemetry(self.obs.registry, prefix="serve.qat")
         self._qat_probe_fn = None
         self._qat_ranges_recorded = False
@@ -103,6 +105,8 @@ class PolicyEngine:
                                      prefix="serve.batcher")
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        self.obs.register_health("serve", self.health)
+        self.obs.ensure_server()
 
     @classmethod
     def from_ddpg(cls, state: "ddpg.DDPGState", **kwargs) -> "PolicyEngine":
@@ -217,6 +221,33 @@ class PolicyEngine:
             r.future.set_exception(
                 RuntimeError("policy engine stopped before serving this "
                              "request"))
+
+    def close(self) -> None:
+        """Shut the engine down for good: stop the serve loop and flush
+        the tracer (to its configured path, if any) so a run that died
+        mid-serve still leaves its trace on disk.  The observability
+        bundle itself (HTTP server) stays up — it may be shared with
+        other engines; `Observability.close()` owns that."""
+        self.stop()
+        self.obs.flush()
+
+    def __enter__(self) -> "PolicyEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def health(self) -> dict:
+        """`/healthz` source: ok while the dispatch calibration holds.
+        Includes enough context (drift factor, serving state, lifetime
+        batches) for an operator to act on a 503 without shelling in."""
+        drift = self._audit.drift()
+        return {"ok": not drift["stale"],
+                "serving": self._thread is not None,
+                "drift_factor": drift["drift_factor"],
+                "drift_threshold": drift["threshold"],
+                "batches": self._metrics.calls}
 
     def _serve_loop(self) -> None:
         tracer = self.obs.tracer

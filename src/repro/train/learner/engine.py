@@ -100,7 +100,9 @@ class LearnerEngine:
                                       items_name="transitions",
                                       calls_name="updates")
         self._audit = DispatchAudit(self.cost_model, self.dims,
-                                    threshold=self.obs.audit_threshold)
+                                    threshold=self.obs.audit_threshold,
+                                    registry=self.obs.registry,
+                                    prefix="learner.dispatch_audit")
         self._qat = QATTelemetry(self.obs.registry, prefix="learner.qat")
         self._batcher = UpdateBatcher(self.batcher_config,
                                       required_keys=required_keys,
@@ -111,6 +113,8 @@ class LearnerEngine:
         # one lock serializes state mutation (sync callers + drain thread):
         # updates are sequential by construction
         self._ulock = threading.Lock()
+        self.obs.register_health("learner", self.health)
+        self.obs.ensure_server()
 
     @classmethod
     def from_ddpg(cls, state: "ddpg.DDPGState", cfg: "ddpg.DDPGConfig",
@@ -308,6 +312,29 @@ class LearnerEngine:
         for r in self._batcher.drain():
             r.future.set_exception(
                 RuntimeError("learner stopped before applying this update"))
+
+    def close(self) -> None:
+        """Stop the drain loop and flush the tracer so an aborted training
+        run keeps its trace.  The observability bundle's HTTP server stays
+        up (it may be shared); `Observability.close()` owns that."""
+        self.stop()
+        self.obs.flush()
+
+    def __enter__(self) -> "LearnerEngine":
+        return self.start()
+
+    def __exit__(self, *exc) -> bool:
+        self.close()
+        return False
+
+    def health(self) -> dict:
+        """`/healthz` source: ok while the dispatch calibration holds."""
+        drift = self._audit.drift()
+        return {"ok": not drift["stale"],
+                "training": self._thread is not None,
+                "drift_factor": drift["drift_factor"],
+                "drift_threshold": drift["threshold"],
+                "updates": self._metrics.calls}
 
     def _serve_loop(self) -> None:
         tracer = self.obs.tracer

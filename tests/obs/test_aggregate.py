@@ -1,0 +1,217 @@
+"""obs/aggregate: fleet merge parity, ordering, liveness/staleness.
+
+The headline property (pinned with hypothesis, or the tests/_hyp.py
+deterministic fallback on bare images): splitting one observation stream
+across N per-host registries and merging their wire snapshots reproduces
+the single registry that saw every observation — counters exactly,
+histogram bucket state and therefore quantiles bit-for-bit.
+"""
+import json
+
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+except ImportError:          # pragma: no cover - exercised on bare images
+    from _hyp import hypothesis, st
+
+from repro.obs.aggregate import FleetAggregator
+from repro.obs.metrics import Histogram, MetricsRegistry
+
+
+class FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _host_registry(name, clock=None):
+    reg = MetricsRegistry(host=name)
+    if clock is not None:
+        # registries stamp snapshot_ts with time.time(); tests that need
+        # deterministic ordering monkey-patch the stamp through _meta
+        orig = reg._meta
+
+        def _meta():
+            m = orig()
+            m["snapshot_ts"] = clock()
+            return m
+
+        reg._meta = _meta
+    return reg
+
+
+# --------------------------------------------------------------------- #
+# merge parity: N hosts == 1 registry, bit-for-bit
+# --------------------------------------------------------------------- #
+
+@hypothesis.given(st.integers(min_value=1, max_value=5),
+                  st.integers(min_value=0, max_value=2**31 - 1))
+@hypothesis.settings(max_examples=20, deadline=None)
+def test_fleet_merge_reproduces_single_registry(n_hosts, seed):
+    rng = np.random.default_rng(seed)
+    n_obs = int(rng.integers(1, 200))
+    # lognormal latencies spanning the bucket range, plus occasional
+    # under/overflow outliers
+    values = np.exp(rng.normal(-6.0, 2.0, n_obs))
+    values[rng.random(n_obs) < 0.05] = 1e-9
+    values[rng.random(n_obs) < 0.05] = 5e4
+    owners = rng.integers(0, n_hosts, n_obs)
+
+    reference = MetricsRegistry(host="reference")
+    hosts = [MetricsRegistry(host=f"h{i}") for i in range(n_hosts)]
+    for v, k in zip(values, owners):
+        for reg in (reference, hosts[int(k)]):
+            reg.histogram("latency_s").observe(float(v))
+            reg.counter("requests").inc()
+            reg.counter("weight").inc(float(v))
+
+    agg = FleetAggregator()
+    for reg in hosts:
+        # through a real JSON encode/decode: exactly the HTTP path
+        agg.ingest(json.loads(json.dumps(reg.to_wire())))
+    merged = agg.merged()
+
+    assert merged.counter("requests").value == n_obs
+    assert merged.counter("weight").value == \
+        pytest.approx(float(values.sum()), rel=1e-9)
+    h_ref = reference.histogram("latency_s")
+    h_mrg = merged.histogram("latency_s")
+    assert h_mrg._counts == h_ref._counts          # exact bucket parity
+    for q in (0.0, 0.01, 0.25, 0.5, 0.75, 0.99, 1.0):
+        assert h_mrg.quantile(q) == h_ref.quantile(q)   # bit-for-bit
+    s_ref, s_mrg = h_ref.summary(), h_mrg.summary()
+    # mean sums per-host partials in a different order than the single
+    # stream — equal to float associativity, everything else exact
+    assert s_mrg.pop("mean") == pytest.approx(s_ref.pop("mean"), rel=1e-12)
+    assert s_mrg == s_ref
+
+
+def test_merged_registry_is_reexportable():
+    """The merged view is a real registry: it wires, renders, and can be
+    ingested by ANOTHER aggregation tier."""
+    a, b = MetricsRegistry(host="a"), MetricsRegistry(host="b")
+    for reg, v in ((a, 0.001), (b, 0.1)):
+        reg.histogram("lat").observe(v)
+        reg.counter("n").inc()
+    tier1 = FleetAggregator()
+    tier1.ingest(a)
+    tier1.ingest(b)
+    tier2 = FleetAggregator()
+    assert tier2.ingest(tier1.merged()) == "fleet"
+    assert tier2.merged().counter("n").value == 2
+    assert tier2.merged().histogram("lat").count == 2
+
+
+# --------------------------------------------------------------------- #
+# ingest ordering
+# --------------------------------------------------------------------- #
+
+def test_out_of_order_snapshots_are_dropped():
+    reg = MetricsRegistry(host="h")
+    reg.counter("n").inc()
+    old = reg.to_wire()                            # seq 1
+    reg.counter("n").inc()
+    new = reg.to_wire()                            # seq 2
+
+    agg = FleetAggregator()
+    assert agg.ingest(new) == "h"
+    assert agg.ingest(old) is None                 # stale: dropped
+    assert agg.merged().counter("n").value == 2
+    # replaying the held snapshot is also a no-op (seq ties drop)
+    assert agg.ingest(new) is None
+
+
+def test_ingest_requires_host_identity():
+    with pytest.raises(ValueError, match="meta.host"):
+        FleetAggregator().ingest({"version": 1, "meta": {},
+                                  "counters": {}, "gauges": {},
+                                  "histograms": {}})
+
+
+def test_histogram_layout_mismatch_is_an_error():
+    a, b = MetricsRegistry(host="a"), MetricsRegistry(host="b")
+    a.histogram("h", lo=1e-7, hi=1e4, growth=1.15).observe(0.1)
+    b.histogram("h", lo=1e-3, hi=1e3, growth=1.5).observe(0.1)
+    agg = FleetAggregator()
+    agg.ingest(a)
+    agg.ingest(b)
+    with pytest.raises(ValueError, match="bucket layout"):
+        agg.merged()
+
+
+# --------------------------------------------------------------------- #
+# gauges: LWW by snapshot time + per-host breakdown
+# --------------------------------------------------------------------- #
+
+def test_gauge_lww_by_snapshot_ts_with_breakdown():
+    clock = FakeClock()
+    early = _host_registry("early", clock)
+    late = _host_registry("late", clock)
+    early.gauge("temp").set(10.0)
+    late.gauge("temp").set(99.0)
+
+    agg = FleetAggregator()
+    clock.t = 1000.0
+    w_early = early.to_wire()
+    clock.t = 2000.0
+    w_late = late.to_wire()
+    # ingestion order must not matter — LWW keys off snapshot_ts
+    agg.ingest(w_late)
+    agg.ingest(w_early)
+    assert agg.merged().gauge("temp").value == 99.0
+    assert agg.gauges_by_host()["temp"] == {"early": 10.0, "late": 99.0}
+
+
+# --------------------------------------------------------------------- #
+# liveness / staleness
+# --------------------------------------------------------------------- #
+
+def test_liveness_flips_dead_when_snapshots_stop():
+    clock = FakeClock(1000.0)
+    agg = FleetAggregator(staleness_s=5.0, clock=clock)
+    fast = _host_registry("fast", clock)
+    slow = _host_registry("slow", clock)
+    fast.counter("n").inc()
+    slow.counter("n").inc()
+    agg.ingest(fast)
+    agg.ingest(slow)
+
+    clock.t += 3.0                                  # both inside timeout
+    agg.ingest(fast)
+    hosts = agg.hosts()
+    assert hosts["fast"]["alive"] and hosts["slow"]["alive"]
+
+    clock.t += 4.0                                  # slow: 7s > 5s gap
+    agg.ingest(fast)
+    hosts = agg.hosts()
+    assert hosts["fast"]["alive"]
+    assert not hosts["slow"]["alive"]
+    assert hosts["slow"]["stale"]
+    assert hosts["slow"]["snapshot_age_s"] == pytest.approx(7.0)
+    # a live host shipping OLD data is alive but stale
+    assert hosts["fast"]["snapshot_age_s"] == pytest.approx(0.0)
+
+    clock.t += 10.0
+    agg.ingest(slow)                                # recovery
+    assert agg.hosts()["slow"]["alive"]
+
+
+def test_fleet_snapshot_is_json_safe_and_complete():
+    clock = FakeClock()
+    agg = FleetAggregator(clock=clock)
+    reg = _host_registry("h1", clock)
+    reg.counter("n").inc()
+    reg.gauge("g").set(2.0)
+    reg.histogram("lat").observe(0.01)
+    agg.ingest(reg)
+    snap = agg.snapshot()
+    json.dumps(snap, allow_nan=False)
+    assert snap["meta"]["host"] == "fleet"
+    assert snap["counters"]["n"] == 1
+    assert "h1" in snap["hosts"]
+    assert snap["gauges_by_host"]["g"] == {"h1": 2.0}

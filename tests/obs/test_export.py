@@ -1,0 +1,196 @@
+"""obs/export + the metrics wire format: lossless round-trip, strict-JSON
+safety, Prometheus text exposition, and the JSONL snapshot log."""
+import json
+import math
+
+import pytest
+
+from repro.obs.export import (
+    as_wire,
+    prom_name,
+    read_snapshot_jsonl,
+    render_jsonl,
+    render_prometheus,
+    write_snapshot_jsonl,
+)
+from repro.obs.metrics import Histogram, MetricsRegistry, WIRE_VERSION
+
+
+def _populated_registry(host="hostA"):
+    reg = MetricsRegistry(host=host)
+    reg.counter("serve.requests").inc(42)
+    reg.counter("serve.actions").inc(7.5)
+    reg.gauge("serve.dispatch_audit.stale").set(1.0)
+    reg.gauge("unset.gauge")                       # created, never set
+    h = reg.histogram("serve.latency_s")
+    for v in [1e-8, 1e-4, 3e-4, 0.002, 0.5, 2e4]:  # under + in + overflow
+        h.observe(v)
+    return reg
+
+
+# --------------------------------------------------------------------- #
+# histogram wire round-trip
+# --------------------------------------------------------------------- #
+
+def test_histogram_to_from_dict_lossless():
+    h = Histogram()
+    for v in [1e-8, 1e-4, 0.002, 0.5, 123.0, 2e4]:
+        h.observe(v)
+    d = h.to_dict()
+    json.dumps(d, allow_nan=False)                 # strict-JSON-safe
+    h2 = Histogram.from_dict(d)
+    assert h2._counts == h._counts
+    assert h2.count == h.count
+    for q in (0.0, 0.25, 0.5, 0.9, 0.99, 1.0):
+        assert h2.quantile(q) == h.quantile(q)     # bit-for-bit
+    assert h2.summary() == h.summary()
+
+
+def test_empty_histogram_round_trip_is_strict_json_safe():
+    h = Histogram()
+    d = h.to_dict()
+    json.dumps(d, allow_nan=False)                 # inf extrema -> None
+    assert d["min"] is None and d["max"] is None
+    h2 = Histogram.from_dict(d)
+    assert h2.count == 0
+    assert h2._min == math.inf and h2._max == -math.inf
+    h2.observe(0.5)                                # extrema still track
+    assert h2.summary()["min"] == 0.5
+
+
+def test_histogram_from_dict_rejects_layout_mismatch():
+    d = Histogram().to_dict()
+    d["counts"] = d["counts"][:-1]
+    with pytest.raises(ValueError, match="counts length"):
+        Histogram.from_dict(d)
+
+
+# --------------------------------------------------------------------- #
+# registry wire round-trip + snapshot meta
+# --------------------------------------------------------------------- #
+
+def test_registry_wire_round_trip_preserves_everything():
+    reg = _populated_registry()
+    wire = reg.to_wire()
+    assert wire["version"] == WIRE_VERSION
+    # survives an actual JSON encode/decode cycle (the HTTP /snapshot path)
+    wire = json.loads(json.dumps(wire, allow_nan=False))
+    reg2 = MetricsRegistry.from_wire(wire)
+    assert reg2.host == "hostA"                    # sender identity kept
+    assert reg2.counter("serve.requests").value == 42
+    assert reg2.counter("serve.actions").value == 7.5
+    assert reg2.gauge("serve.dispatch_audit.stale").value == 1.0
+    assert reg2.gauge("unset.gauge").value is None
+    h, h2 = reg.histogram("serve.latency_s"), reg2.histogram("serve.latency_s")
+    for q in (0.5, 0.99):
+        assert h2.quantile(q) == h.quantile(q)
+    # round-trip stability: re-exporting reproduces the same payload
+    w2 = reg2.to_wire()
+    for key in ("counters", "gauges", "histograms"):
+        assert w2[key] == wire[key]
+
+
+def test_from_wire_rejects_unknown_version():
+    wire = MetricsRegistry().to_wire()
+    wire["version"] = 999
+    with pytest.raises(ValueError, match="wire version"):
+        MetricsRegistry.from_wire(wire)
+
+
+def test_snapshot_meta_identity_seq_and_json_safety():
+    reg = _populated_registry(host="me:123")
+    s1, s2 = reg.snapshot(), reg.snapshot()
+    for s in (s1, s2):
+        json.dumps(s, allow_nan=False)             # the ISSUE's guard test
+        assert s["meta"]["host"] == "me:123"
+        assert isinstance(s["meta"]["pid"], int)
+        assert isinstance(s["meta"]["snapshot_ts"], float)
+    assert s2["meta"]["seq"] == s1["meta"]["seq"] + 1   # monotonic
+    assert s2["meta"]["snapshot_ts"] >= s1["meta"]["snapshot_ts"]
+    # to_wire shares the same seq stream: ordering spans both forms
+    assert reg.to_wire()["meta"]["seq"] == s2["meta"]["seq"] + 1
+
+
+def test_as_wire_normalizes_and_rejects():
+    reg = _populated_registry()
+    wire = reg.to_wire()
+    assert as_wire(wire) is wire                   # pass-through
+    assert as_wire(reg)["counters"] == wire["counters"]
+    with pytest.raises(TypeError):
+        as_wire(42)
+
+
+# --------------------------------------------------------------------- #
+# Prometheus text exposition
+# --------------------------------------------------------------------- #
+
+def test_prom_name_sanitization():
+    assert prom_name("serve.latency_s") == "serve_latency_s"
+    assert prom_name("a-b.c:d") == "a_b_c:d"
+    assert prom_name("9lives") == "_9lives"
+
+
+def test_render_prometheus_shape():
+    text = render_prometheus(_populated_registry())
+    lines = text.splitlines()
+    assert text.endswith("\n")
+    assert "# TYPE serve_requests counter" in lines
+    assert "serve_requests 42" in lines
+    assert "# TYPE serve_dispatch_audit_stale gauge" in lines
+    # unset gauges are skipped entirely
+    assert not any("unset_gauge" in ln for ln in lines)
+    # histogram: cumulative buckets, +Inf closes at the total count
+    assert "# TYPE serve_latency_s histogram" in lines
+    assert 'serve_latency_s_bucket{le="+Inf"} 6' in lines
+    assert "serve_latency_s_count 6" in lines
+    buckets = [ln for ln in lines
+               if ln.startswith("serve_latency_s_bucket")]
+    cums = [int(ln.rsplit(" ", 1)[1]) for ln in buckets]
+    assert cums == sorted(cums) and cums[-1] == 6
+    # meta stamp rides along as gauges
+    assert any(ln.startswith("obs_snapshot_seq") for ln in lines)
+
+
+def test_render_prometheus_labels_and_escaping():
+    reg = MetricsRegistry(host="h")
+    reg.counter("c").inc()
+    text = render_prometheus(reg, labels={"host": 'we"ird\\name'})
+    assert 'c{host="we\\"ird\\\\name"} 1' in text
+
+
+def test_histogram_bucket_edges_bound_the_samples():
+    """Every observation must be <= the cumulative-bucket edge it lands
+    under (the exposition's le edges are real upper bounds)."""
+    reg = MetricsRegistry(host="h")
+    h = reg.histogram("lat")
+    values = [2e-4, 5e-3, 0.11]
+    for v in values:
+        h.observe(v)
+    lines = render_prometheus(reg).splitlines()
+    edges = [float(ln.split('le="')[1].split('"')[0])
+             for ln in lines
+             if ln.startswith("lat_bucket") and "+Inf" not in ln]
+    for v, le in zip(sorted(values), sorted(edges)):
+        assert v <= le
+
+
+# --------------------------------------------------------------------- #
+# JSONL snapshot log
+# --------------------------------------------------------------------- #
+
+def test_snapshot_jsonl_append_and_read_back(tmp_path):
+    reg = _populated_registry()
+    path = tmp_path / "snaps.jsonl"
+    write_snapshot_jsonl(path, reg)
+    reg.counter("serve.requests").inc(8)           # 42 -> 50
+    write_snapshot_jsonl(path, reg)
+    snaps = read_snapshot_jsonl(path)
+    assert len(snaps) == 2
+    assert snaps[0]["counters"]["serve.requests"] == 42
+    assert snaps[1]["counters"]["serve.requests"] == 50
+    assert snaps[1]["meta"]["seq"] > snaps[0]["meta"]["seq"]
+    # each line is the compact single-line rendering
+    assert "\n" not in render_jsonl(reg)
+    # overwrite mode truncates
+    write_snapshot_jsonl(path, reg, append=False)
+    assert len(read_snapshot_jsonl(path)) == 1

@@ -1,0 +1,116 @@
+"""obs/server: the per-host HTTP endpoint (ephemeral port, /metrics,
+/snapshot, /healthz semantics) and the Observability bundle's server
+ownership."""
+import json
+import urllib.error
+import urllib.request
+
+from repro.obs import Observability
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.server import ObsServer
+
+
+def _get(url):
+    try:
+        with urllib.request.urlopen(url, timeout=5.0) as r:
+            return r.status, r.read()
+    except urllib.error.HTTPError as err:
+        return err.code, err.read()
+
+
+def _registry():
+    reg = MetricsRegistry(host="test-host")
+    reg.counter("serve.requests").inc(3)
+    reg.histogram("serve.latency_s").observe(0.01)
+    return reg
+
+
+def test_endpoints_serve_registry():
+    reg = _registry()
+    with ObsServer(reg) as srv:
+        assert srv.port not in (None, 0)           # ephemeral port bound
+        assert srv.url == f"http://127.0.0.1:{srv.port}"
+
+        code, body = _get(srv.url + "/metrics")
+        assert code == 200
+        assert "serve_requests 3" in body.decode()
+
+        code, body = _get(srv.url + "/snapshot")
+        assert code == 200
+        wire = json.loads(body)
+        assert wire["meta"]["host"] == "test-host"
+        # the snapshot is the lossless wire form: reconstructible
+        reg2 = MetricsRegistry.from_wire(wire)
+        assert reg2.counter("serve.requests").value == 3
+
+        code, body = _get(srv.url + "/nope")
+        assert code == 404
+    assert srv.port is None                        # stopped on exit
+
+
+def test_healthz_aggregates_sources_and_503s():
+    reg = _registry()
+    verdict = {"ok": True}
+    srv = ObsServer(reg, health_sources={
+        "static": lambda: {"ok": True, "detail": 1}}).start()
+    try:
+        srv.register_health("dynamic", lambda: dict(verdict))
+        code, body = _get(srv.url + "/healthz")
+        health = json.loads(body)
+        assert code == 200 and health["ok"]
+        assert set(health["checks"]) == {"static", "dynamic"}
+
+        verdict["ok"] = False                      # one source fails -> 503
+        code, body = _get(srv.url + "/healthz")
+        health = json.loads(body)
+        assert code == 503 and not health["ok"]
+        assert health["checks"]["static"]["ok"]    # others still reported
+    finally:
+        srv.stop()
+
+
+def test_raising_health_source_fails_health_not_server():
+    def broken():
+        raise RuntimeError("probe exploded")
+
+    with ObsServer(_registry(), health_sources={"broken": broken}) as srv:
+        code, body = _get(srv.url + "/healthz")
+        health = json.loads(body)
+        assert code == 503 and not health["ok"]
+        assert "probe exploded" in health["checks"]["broken"]["error"]
+        # the server itself survived the bad source
+        assert _get(srv.url + "/metrics")[0] == 200
+
+
+def test_snapshot_fn_override():
+    srv = ObsServer(_registry(),
+                    snapshot_fn=lambda: {"custom": "fleet-view"}).start()
+    try:
+        code, body = _get(srv.url + "/snapshot")
+        assert code == 200 and json.loads(body) == {"custom": "fleet-view"}
+    finally:
+        srv.stop()
+
+
+def test_observability_bundle_owns_server_lifecycle():
+    obs = Observability(serve_http=0)
+    obs.register_health("pre", lambda: {"ok": True})   # before the server
+    assert obs.server is None
+    with obs:                                       # __enter__ starts it
+        srv = obs.server
+        assert srv is not None and srv.port
+        assert obs.ensure_server() is srv           # idempotent
+        obs.register_health("post", lambda: {"ok": True})
+        code, body = _get(srv.url + "/healthz")
+        assert code == 200
+        assert set(json.loads(body)["checks"]) == {"pre", "post"}
+    assert obs.server is None                       # __exit__ stopped it
+    obs.close()                                     # close is idempotent
+
+
+def test_observability_without_port_serves_nothing():
+    obs = Observability()
+    assert obs.ensure_server() is None
+    assert obs.server is None
+    obs.register_health("x", lambda: {"ok": True})  # harmless no-op path
+    obs.close()

@@ -1,0 +1,196 @@
+"""obs/slo: rule semantics, fleet-aware gauge checks, watchdog sinks."""
+import pytest
+
+from repro.obs.aggregate import FleetAggregator
+from repro.obs.metrics import MetricsRegistry
+from repro.obs.slo import (
+    CounterCeiling,
+    GaugeCeiling,
+    HeartbeatGap,
+    HistogramCeiling,
+    SLOWatchdog,
+    default_rules,
+)
+from repro.obs.trace import Tracer
+
+
+class FakeClock:
+    def __init__(self, t=1000.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+
+def _registry(p99_s=0.01, stale=0.0, saturation=0.0, failures=0):
+    reg = MetricsRegistry(host="h1")
+    lat = reg.histogram("serve.latency_s")
+    for _ in range(90):
+        lat.observe(p99_s / 10)
+    for _ in range(10):
+        lat.observe(p99_s * 1.5)                    # p99 lands in the tail
+    reg.gauge("serve.dispatch_audit.stale").set(stale)
+    sat = reg.histogram("serve.qat.act0.saturation",
+                        lo=1e-6, hi=2.0, growth=1.25)
+    sat.observe(saturation)
+    if failures:
+        reg.counter("ft.failures").inc(failures)
+    return reg
+
+
+# --------------------------------------------------------------------- #
+# individual rules
+# --------------------------------------------------------------------- #
+
+def test_healthy_registry_raises_no_alerts():
+    wd = SLOWatchdog()
+    assert wd.evaluate(_registry()) == []
+    assert wd.firing() == []
+    assert wd.health()["ok"]
+
+
+def test_histogram_ceiling_fires_on_p99():
+    wd = SLOWatchdog()
+    alerts = wd.evaluate(_registry(p99_s=1.0))      # >> 0.25 default
+    assert [a["rule"] for a in alerts] == ["serve-latency-p99"]
+    a = alerts[0]
+    assert a["metric"] == "serve.latency_s"
+    assert a["severity"] == "critical"
+    assert a["value"] > a["threshold"] == 0.25
+    assert wd.firing() == ["serve-latency-p99"]
+    assert not wd.health()["ok"]
+
+
+def test_histogram_ceiling_min_count_suppresses_noise():
+    reg = MetricsRegistry(host="h")
+    reg.histogram("serve.latency_s").observe(100.0)  # one terrible sample
+    rule = HistogramCeiling(name="p99", pattern="serve.latency_s",
+                            ceiling=0.25, min_count=10)
+    assert SLOWatchdog([rule]).evaluate(reg) == []
+
+
+def test_histogram_ceiling_stats():
+    reg = MetricsRegistry(host="h")
+    h = reg.histogram("x")
+    for v in (0.1, 0.1, 10.0):
+        h.observe(v)
+    mean_rule = HistogramCeiling(name="m", pattern="x", stat="mean",
+                                 ceiling=1.0)
+    p50_rule = HistogramCeiling(name="q", pattern="x", stat="p50",
+                                ceiling=1.0)
+    assert len(SLOWatchdog([mean_rule]).evaluate(reg)) == 1   # mean ~3.4
+    assert SLOWatchdog([p50_rule]).evaluate(reg) == []        # p50 ~0.1
+    bad = HistogramCeiling(name="b", pattern="x", stat="median", ceiling=1)
+    with pytest.raises(ValueError, match="unknown stat"):
+        SLOWatchdog([bad]).evaluate(reg)
+
+
+def test_gauge_and_counter_ceilings():
+    wd = SLOWatchdog()
+    alerts = wd.evaluate(_registry(stale=1.0, failures=2))
+    assert {a["rule"] for a in alerts} == \
+        {"dispatch-calibration-stale", "host-failures"}
+
+
+def test_qat_saturation_budget():
+    wd = SLOWatchdog()
+    alerts = wd.evaluate(_registry(saturation=0.5))  # 50% clipping
+    assert [a["rule"] for a in alerts] == ["qat-clip-saturation"]
+    assert alerts[0]["metric"] == "serve.qat.act0.saturation"
+
+
+def test_heartbeat_gap_uses_host_view():
+    clock = FakeClock()
+    rule = HeartbeatGap(name="gap", max_gap_s=5.0)
+    wd = SLOWatchdog([rule], clock=clock)
+    hosts = {"fresh": {"alive": True, "snapshot_age_s": 1.0},
+             "lagging": {"alive": True, "snapshot_age_s": 9.0},
+             "dead": {"alive": False, "snapshot_age_s": 60.0}}
+    alerts = wd.evaluate(MetricsRegistry(host="fleet"), hosts=hosts)
+    by_metric = {a["metric"]: a for a in alerts}
+    assert set(by_metric) == {"hosts.lagging", "hosts.dead"}
+    assert "dead" in by_metric["hosts.dead"]["message"]
+
+
+# --------------------------------------------------------------------- #
+# fleet-aware gauge evaluation (per-host breakdown beats LWW)
+# --------------------------------------------------------------------- #
+
+def test_gauge_rule_sees_breach_behind_lww_merge():
+    """A healthy host's later 0.0 must not mask another host's 1.0: the
+    fleet evaluation checks the per-host breakdown and names the host."""
+    clock = FakeClock()
+    rogue = MetricsRegistry(host="rogue")
+    healthy = MetricsRegistry(host="healthy")
+    rogue.gauge("serve.dispatch_audit.stale").set(1.0)
+    healthy.gauge("serve.dispatch_audit.stale").set(0.0)
+
+    agg = FleetAggregator(clock=clock)
+    w_rogue = rogue.to_wire()
+    w_healthy = healthy.to_wire()
+    # force the healthy snapshot to be the newest: LWW merge hides the 1.0
+    w_rogue["meta"]["snapshot_ts"] = 1000.0
+    w_healthy["meta"]["snapshot_ts"] = 2000.0
+    agg.ingest(w_rogue)
+    agg.ingest(w_healthy)
+    assert agg.merged().gauge("serve.dispatch_audit.stale").value == 0.0
+
+    wd = SLOWatchdog(clock=clock)
+    alerts = [a for a in wd.evaluate(agg)
+              if a["rule"] == "dispatch-calibration-stale"]
+    assert len(alerts) == 1
+    assert alerts[0]["metric"] == "serve.dispatch_audit.stale@rogue"
+    assert "rogue" in alerts[0]["message"]
+
+
+def test_watchdog_accepts_wire_dict():
+    wd = SLOWatchdog()
+    alerts = wd.evaluate(_registry(stale=1.0).to_wire())
+    assert [a["rule"] for a in alerts] == ["dispatch-calibration-stale"]
+    with pytest.raises(TypeError):
+        wd.evaluate([1, 2, 3])
+
+
+# --------------------------------------------------------------------- #
+# watchdog sinks + bookkeeping
+# --------------------------------------------------------------------- #
+
+def test_alerts_feed_registry_and_tracer():
+    sink = MetricsRegistry(host="watchdog")
+    tracer = Tracer()
+    wd = SLOWatchdog(registry=sink, tracer=tracer)
+    wd.evaluate(_registry(stale=1.0))
+    wd.evaluate(_registry())                        # recovers
+
+    assert sink.counter("slo.evaluations").value == 2
+    assert sink.counter(
+        "slo.dispatch-calibration-stale.breaches").value == 1
+    assert sink.gauge(
+        "slo.dispatch-calibration-stale.firing").value == 0.0  # recovered
+    instants = [e for e in tracer.events() if e["name"] == "slo.breach"]
+    assert len(instants) == 1
+    assert instants[0]["args"]["rule"] == "dispatch-calibration-stale"
+    assert len(wd.alerts) == 1                      # history retained
+
+
+def test_alert_history_is_bounded():
+    wd = SLOWatchdog([CounterCeiling(name="budget", pattern="n",
+                                     ceiling=0.0)], max_alerts=5)
+    reg = MetricsRegistry(host="h")
+    reg.counter("n").inc()
+    for _ in range(20):
+        wd.evaluate(reg)
+    assert len(wd.alerts) == 5
+
+
+def test_duplicate_rule_names_rejected():
+    with pytest.raises(ValueError, match="duplicate"):
+        SLOWatchdog([GaugeCeiling(name="x", pattern="a"),
+                     CounterCeiling(name="x", pattern="b")])
+
+
+def test_default_rules_cover_the_fleet_surfaces():
+    names = {r.name for r in default_rules()}
+    assert names == {"serve-latency-p99", "learner-latency-p99",
+                     "dispatch-calibration-stale", "qat-clip-saturation",
+                     "host-failures", "heartbeat-gap"}

@@ -108,3 +108,54 @@ def test_tracer_thread_safety_event_count():
         th.join()
     assert len(t.events()) == n * per
     assert t.dropped == 0
+
+
+# --------------------------------------------------------------------- #
+# path-bound tracers: flush/close/context-manager semantics
+# --------------------------------------------------------------------- #
+
+def test_flush_writes_to_configured_path(tmp_path):
+    path = tmp_path / "t.jsonl"
+    t = Tracer(path=str(path))
+    with t.span("a"):
+        pass
+    assert t.flush() == str(path)
+    assert [e["name"] for e in read_jsonl(path)] == ["a"]
+    with t.span("b"):
+        pass
+    t.flush()                               # idempotent full rewrite
+    assert [e["name"] for e in read_jsonl(path)] == ["a", "b"]
+
+
+def test_flush_without_path_or_disabled_is_noop(tmp_path):
+    assert Tracer().flush() is None         # no path configured
+    t = Tracer(enabled=False, path=str(tmp_path / "x.jsonl"))
+    assert t.flush() is None                # disabled: nothing to say
+    assert not (tmp_path / "x.jsonl").exists()
+
+
+def test_close_flushes_then_disables(tmp_path):
+    path = tmp_path / "t.jsonl"
+    t = Tracer(path=str(path))
+    with t.span("kept"):
+        pass
+    t.close()
+    assert [e["name"] for e in read_jsonl(path)] == ["kept"]
+    assert not t.enabled
+    with t.span("dropped"):                 # post-close spans are no-ops
+        pass
+    t.close()                               # second close: no rewrite crash
+    assert [e["name"] for e in read_jsonl(path)] == ["kept"]
+
+
+def test_context_manager_lands_trace_on_exception(tmp_path):
+    path = tmp_path / "t.jsonl"
+    try:
+        with Tracer(path=str(path)) as t:
+            with t.span("before-crash"):
+                pass
+            raise RuntimeError("aborted run")
+    except RuntimeError:
+        pass
+    # the whole point: an aborted run still left its trace on disk
+    assert [e["name"] for e in read_jsonl(path)] == ["before-crash"]
