@@ -19,13 +19,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced step counts (CI-scale)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI schema gate: only kernel+serve+learner benches "
-                         "at tiny dims/batches (interpret mode on CPU); "
-                         "emits the same BENCH_*.json shapes for "
+                    help="CI schema gate: only kernel+serve+learner+loop "
+                         "benches at tiny dims/batches (interpret mode on "
+                         "CPU); emits the same BENCH_*.json shapes for "
                          "benchmarks/schema.py")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig7,fig8,fig9,fig10,"
-                         "tableii,kernel,serve,learner")
+                         "tableii,kernel,serve,learner,loop")
     args = ap.parse_args(argv)
     if args.smoke and (args.only or args.quick):
         ap.error("--smoke fixes its own bench set/scale; drop --only/--quick")
@@ -36,7 +36,7 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
                             fig10_accelerator, kernel_bench, learner_bench,
-                            serve_bench, tableii_compare)
+                            loop_bench, serve_bench, tableii_compare)
 
     if args.smoke:
         # calibration order: kernel FIRST — both dispatchers (serve's
@@ -45,6 +45,7 @@ def main(argv=None) -> None:
         kernel_bench.main(["--smoke"])
         serve_bench.main(["--smoke"])
         learner_bench.main(["--smoke"])
+        loop_bench.main(["--smoke"])
         return
 
     if want("kernel"):
@@ -57,6 +58,8 @@ def main(argv=None) -> None:
         # same calibration dependency as serve (train-phase fit from the
         # kernel bench's "train" section)
         learner_bench.main(["--quick"] if args.quick else [])
+    if want("loop"):
+        loop_bench.main(["--quick"] if args.quick else [])
     if want("fig8"):
         fig8_throughput.main(["--steps", "400" if args.quick else "2000"])
     if want("fig9"):

@@ -1,15 +1,15 @@
 """JSON schemas for the tracked benchmark artifacts.
 
-`BENCH_fused_mlp.json`, `BENCH_serve_policy.json`, and `BENCH_learner.json`
-are consumed programmatically — `CostModel.from_bench` calibrates both the
-serving (act-phase) and learner (train-phase) dispatchers from the kernel
-bench, and the CI bench job diffs the serving/training numbers across PRs —
-so format drift must fail the build instead of silently degrading the cost
-model to its defaults.  This module is the single source of truth for all
-three shapes:
+`BENCH_fused_mlp.json`, `BENCH_serve_policy.json`, `BENCH_learner.json`,
+and `BENCH_device_loop.json` are consumed programmatically —
+`CostModel.from_bench` calibrates both the serving (act-phase) and learner
+(train-phase) dispatchers from the kernel bench, and the CI bench job diffs
+the serving/training/loop numbers across PRs — so format drift must fail
+the build instead of silently degrading the cost model to its defaults.
+This module is the single source of truth for all four shapes:
 
     python -m benchmarks.schema --check BENCH_fused_mlp.json \
-        BENCH_serve_policy.json BENCH_learner.json
+        BENCH_serve_policy.json BENCH_learner.json BENCH_device_loop.json
 
 validates files against the schema matching their `schema` tag (exit code 1
 on the first violation).  CI runs exactly that after `benchmarks/run.py
@@ -266,10 +266,60 @@ LEARNER_SCHEMA = {
     },
 }
 
+# the device-resident loop bench: env-steps/s + updates/s vs fleet width
+# (`n_envs` scaling of the single-launch scanned window) and the wall
+# updates/s comparison against the paper-faithful host loop
+DEVICE_LOOP_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "type": "object",
+    "required": ["schema", "config", "scaling", "host_vs_device", "launches"],
+    "properties": {
+        "schema": {"const": "fixar/device_loop_bench/v1"},
+        "config": {
+            "type": "object",
+            "required": ["env", "net", "batch", "window", "n_envs",
+                         "backend"],
+            "properties": {
+                "env": _STR,
+                "net": {"type": "array", "items": {"type": "integer"},
+                        "minItems": 2},
+                "batch": {"type": "integer"},
+                "window": {"type": "integer"},
+                # at least two fleet widths, or there is no scaling curve
+                "n_envs": {"type": "array", "items": {"type": "integer"},
+                           "minItems": 2},
+                "backend": _STR,
+                "smoke": {"type": "boolean"},
+            },
+        },
+        "scaling": {     # {str(n_envs): {env_steps_per_s, updates_per_s, ..}}
+            "type": "object",
+            "minProperties": 2,
+            "additionalProperties": {
+                "type": "object",
+                "required": ["env_steps_per_s", "updates_per_s", "wall_s"],
+                "additionalProperties": _NUM,
+            },
+        },
+        "host_vs_device": {
+            "type": "object",
+            "required": ["host_updates_per_s", "device_updates_per_s",
+                         "speedup", "host_steps"],
+            "additionalProperties": _NUM,
+        },
+        "launches": {    # the single-launch-per-window claim, as data
+            "type": "object",
+            "required": ["windows_traced_per_config"],
+            "additionalProperties": {"type": "integer"},
+        },
+    },
+}
+
 SCHEMAS_BY_TAG = {
     "fixar/fused_mlp_bench/v4": FUSED_MLP_SCHEMA,
     "fixar/serve_policy_bench/v3": SERVE_POLICY_SCHEMA,
     "fixar/learner_bench/v2": LEARNER_SCHEMA,
+    "fixar/device_loop_bench/v1": DEVICE_LOOP_SCHEMA,
 }
 
 

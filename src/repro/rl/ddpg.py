@@ -186,14 +186,25 @@ def init(key: Array, spec: EnvSpec, cfg: DDPGConfig) -> DDPGState:
 
 
 def act(state: DDPGState, obs: Array, *, cfg: DDPGConfig,
-        noise_key: Optional[Array] = None) -> Array:
-    """Actor inference (+ the PRNG exploration-noise unit of Fig. 2)."""
+        noise_key: Optional[Array] = None,
+        noise: Optional[Array] = None) -> Array:
+    """Actor inference (+ the PRNG exploration-noise unit of Fig. 2).
+
+    Exploration comes in two equivalent spellings: `noise_key` draws
+    Gaussian noise internally at `cfg.exploration_sigma` (the legacy
+    surface), while `noise` adds a caller-supplied perturbation — the hook
+    `rl/loop` uses to thread `rl/noise.NoiseProcess` samples (Gaussian or
+    OU, explicit `NoiseState` carry) through the scanned device loop.
+    Either way the perturbation lands pre-clip.
+    """
     # no-QAT fast path: don't materialize a context (which re-derives quant
     # params from the range tree) when every site would be a pass-through
     ctx = QATContext(state.qat) if state.qat.config.enabled else None
     a = actor_forward(state.actor, obs, ctx, backend=cfg.backend)
     if noise_key is not None:
         a = a + cfg.exploration_sigma * jax.random.normal(noise_key, a.shape)
+    elif noise is not None:
+        a = a + noise
     return jnp.clip(a, -1.0, 1.0)
 
 

@@ -1,2 +1,26 @@
-from repro.rl.envs.base import Env, EnvSpec, EnvState, auto_reset
-from repro.rl.envs.locomotion import make, REGISTRY
+from repro.rl.envs.base import (
+    Env,
+    EnvSpec,
+    EnvState,
+    FunctionalEnv,
+    auto_reset,
+    env_init,
+    init_fleet,
+    step_auto,
+    step_fleet,
+)
+from repro.rl.envs.locomotion import REGISTRY, make
+
+__all__ = [
+    "Env",
+    "EnvSpec",
+    "EnvState",
+    "FunctionalEnv",
+    "auto_reset",
+    "env_init",
+    "init_fleet",
+    "step_auto",
+    "step_fleet",
+    "REGISTRY",
+    "make",
+]

@@ -1,16 +1,38 @@
-"""Pure-JAX environment interface (the host-CPU MuJoCo of the paper,
-re-homed onto the accelerator — see DESIGN.md §2).
+"""Pure functional environment API (the host-CPU MuJoCo of the paper,
+re-homed onto the accelerator — see DESIGN.md §2 and docs/device_resident.md).
 
-Every env is a pair of pure functions over an explicit state pytree, so the
-whole env batch can live on-device, be vmapped, and be fused into the
-training step (the 'fused' loop mode), or be stepped from the host (the
-'host' loop mode reproducing the paper's CPU↔FPGA round-trip and Fig. 9
-breakdown).
+An environment is a triple of *pure, key-threaded* functions over an explicit
+state pytree:
+
+    spec                       — static ``EnvSpec`` (dims, episode length)
+    init(key)  -> (state, obs) — fresh episode from a PRNG key
+    step(state, action)
+               -> (state, obs, reward, done)
+
+Purity is the contract everything else is built on: because ``init``/``step``
+close over no hidden host state, a whole fleet of environments can be
+``jax.vmap``-ped over a leading ``n_envs`` axis, the act→store→update chain
+can be ``jax.lax.scan``-ned into a single device launch (``rl/loop.
+train_device``), and randomized-dynamics / observation-noise scenario sweeps
+become a config instead of a port.
+
+Auto-reset: batched fleets must never desynchronize — one env finishing its
+episode cannot stall the other N-1 or force a host round-trip.  ``step_auto``
+therefore folds reset-on-done into the step itself: both branches are
+computed and the reset state is selected per-lane with ``jnp.where``, so the
+vmapped fleet stays a fixed-shape, branch-free program.  ``init_fleet`` /
+``step_fleet`` are the batched forms the device loop uses.
+
+Compat: the pre-redesign surface spelled ``init`` as a ``reset`` method.
+``FunctionalEnv`` keeps that spelling as a thin alias for in-repo envs, and
+``env_init`` resolves either spelling on arbitrary objects so user envs
+written against the old protocol keep working in the loops unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Protocol
+from functools import partial
+from typing import Protocol, runtime_checkable
 
 import jax
 import jax.numpy as jnp
@@ -35,24 +57,92 @@ class EnvSpec:
     episode_length: int = 1000   # paper: episode = 1000 timesteps
 
 
+@runtime_checkable
 class Env(Protocol):
+    """The functional env protocol: ``spec`` + pure ``init``/``step``.
+
+    Implementations must be hashable (frozen dataclasses) so they can ride
+    as static arguments of jitted loop helpers, and ``init``/``step`` must
+    be pure functions of their inputs (all randomness through the explicit
+    key threaded in ``EnvState.key`` / the ``init`` key).
+    """
+
     spec: EnvSpec
 
-    def reset(self, key: Array) -> tuple[EnvState, Array]: ...
+    def init(self, key: Array) -> tuple[EnvState, Array]: ...
 
-    def step(self, state: EnvState, action: Array
-             ) -> tuple[EnvState, Array, Array, Array]:
+    def step(self, state: EnvState, action: Array) -> tuple[EnvState, Array, Array, Array]:
         """-> (new_state, obs, reward, done)"""
 
 
-def auto_reset(env: "Env", state: EnvState, action: Array):
-    """Step with automatic episode reset on done (standard RL plumbing)."""
+class FunctionalEnv:
+    """Mixin providing the legacy ``reset`` spelling as an alias of ``init``.
+
+    Kept for one release so pre-redesign call sites (``env.reset(key)``)
+    keep working; new code should call ``init`` (or ``env_init`` when the
+    env object may predate the redesign).
+    """
+
+    def reset(self, key: Array) -> tuple[EnvState, Array]:
+        return self.init(key)
+
+
+def env_init(env, key: Array) -> tuple[EnvState, Array]:
+    """``env.init(key)``, falling back to the legacy ``reset`` method.
+
+    The single compat seam: every loop entry point resolves envs through
+    this, so an old-style env (only ``reset``) and a new-style env (only
+    ``init``) are both valid fleet members.
+    """
+    fn = getattr(env, "init", None)
+    if fn is None:
+        fn = env.reset
+    return fn(key)
+
+
+def step_auto(env, state: EnvState, action: Array) -> tuple[EnvState, Array, Array, Array]:
+    """Step with automatic episode reset on done.
+
+    Pure and branch-free: the reset episode is always computed and selected
+    per-lane with ``where``, so under ``vmap`` every fleet member runs the
+    same fixed-shape program and done lanes restart without a host round
+    trip.  The returned ``reward``/``done`` describe the *transition that
+    just happened* (the pre-reset step); ``obs``/``state`` are post-reset
+    for done lanes, i.e. already the first observation of the next episode.
+    Truncation (``t == episode_length``) resets exactly like termination —
+    episode accounting that must distinguish the two belongs to the caller
+    (``evaluate`` stops accumulating via its alive mask instead).
+    """
     new_state, obs, reward, done = env.step(state, action)
     key_next, key_reset = jax.random.split(new_state.key)
-    reset_state, reset_obs = env.reset(key_reset)
+    reset_state, reset_obs = env_init(env, key_reset)
     new_state = dataclasses.replace(new_state, key=key_next)
 
     sel = lambda a, b: jnp.where(done, b, a)
     out_state = jax.tree.map(sel, new_state, reset_state)
     out_obs = jnp.where(done, reset_obs, obs)
     return out_state, out_obs, reward, done
+
+
+# Pre-redesign name for `step_auto`, with the same (env, state, action)
+# calling convention. Kept as an alias — same function, not a near-copy.
+auto_reset = step_auto
+
+
+def init_fleet(env, key: Array, n_envs: int) -> tuple[EnvState, Array]:
+    """Initialize an ``n_envs`` fleet: vmapped ``init`` over split keys.
+
+    Every returned leaf gains a leading fleet axis; each env gets its own
+    PRNG stream, so fleet rollouts decorrelate by construction.
+    """
+    keys = jax.random.split(key, n_envs)
+    return jax.vmap(partial(env_init, env))(keys)
+
+
+def step_fleet(
+    env, state: EnvState, action: Array, *, autoreset: bool = True
+) -> tuple[EnvState, Array, Array, Array]:
+    """Step a fleet (leading batch axis on state/action), auto-resetting
+    done lanes by default so the fleet never desynchronizes."""
+    fn = partial(step_auto, env) if autoreset else env.step
+    return jax.vmap(fn)(state, action)

@@ -7,12 +7,25 @@ dimensionality, episode length 1000, termination-on-fall for Hopper,
 dense forward-progress reward with control cost — over a simplified but
 genuinely dynamical articulated-chain model:
 
-  joints:   θ̈ᵢ = 8·uᵢ − 2·θ̇ᵢ − 4·θᵢ          (torque, damping, stiffness)
+  joints:   θ̈ᵢ = g·uᵢ − 2·θ̇ᵢ − 4·θᵢ          (torque gain g, damping,
+                                                  stiffness)
   thrust:   F   = Σᵢ cᵢ · sin(θᵢ) · θ̇ᵢ          (paddling: extended joints
                                                   moving produce thrust —
                                                   forces *coordinated* gaits)
   body:     v̇   = F − 0.5·v,   ḣ = spring,  pitch damped, driven by joints
   reward:   rᵗ  = v − 0.05·‖u‖²                 (MuJoCo-style run reward)
+
+Every env here implements the functional protocol of ``envs/base.py``:
+``init(key)`` / ``step(state, action)`` are *pure* functions of their
+arguments (the env object itself is a frozen — hashable, static — config),
+so fleets vmap and the whole training loop scans on device.  The legacy
+``reset`` method spelling is kept via the ``FunctionalEnv`` compat mixin.
+
+Scenario knobs are config, not code: ``torque_gain`` scales the actuation
+(dynamics randomization = constructing variants with different gains) and
+``obs_noise`` adds zero-mean Gaussian observation noise, derived per
+timestep from the env's own key via ``fold_in`` so ``step`` stays pure and
+the noise stream is decorrelated across fleet members and timesteps.
 
 DDPG with the published 400-300 nets learns these (tests/test_ddpg.py), and
 the fixed-point story (Fig. 7) transfers: the envs have continuous state,
@@ -28,7 +41,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.rl.envs.base import EnvSpec, EnvState
+from repro.rl.envs.base import EnvSpec, EnvState, FunctionalEnv
 
 Array = jax.Array
 
@@ -36,7 +49,7 @@ _DT = 0.05
 
 
 @dataclasses.dataclass(frozen=True)
-class ChainEnv:
+class ChainEnv(FunctionalEnv):
     """Generic articulated chain. aux state = [v, height, pitch] subset."""
 
     spec: EnvSpec
@@ -45,8 +58,10 @@ class ChainEnv:
     terminate_on_fall: bool = False
     fall_height: float = -1.0
     ctrl_cost: float = 0.05
+    torque_gain: float = 8.0   # actuation scale (scenario knob)
+    obs_noise: float = 0.0     # observation-noise stddev (scenario knob)
 
-    def reset(self, key):
+    def init(self, key):
         kq, kd, knext = jax.random.split(key, 3)
         n = self.n_joints + self.n_aux
         q = 0.1 * jax.random.normal(kq, (n,))
@@ -57,14 +72,24 @@ class ChainEnv:
     def _split(self, x):
         return x[: self.n_aux], x[self.n_aux:]
 
-    def _obs(self, s: EnvState) -> Array:
+    def _obs_clean(self, s: EnvState) -> Array:
         aux, theta = self._split(s.q)
         auxd, thetad = self._split(s.qd)
         parts = [aux, auxd, theta, thetad]
         obs = jnp.concatenate(parts)
         assert obs.shape[0] == self.spec.obs_dim, (
-            f"{self.spec.name}: obs {obs.shape[0]} != {self.spec.obs_dim}")
+            f"{self.spec.name}: obs {obs.shape[0]} != {self.spec.obs_dim}"
+        )
         return obs.astype(jnp.float32)
+
+    def _obs(self, s: EnvState) -> Array:
+        obs = self._obs_clean(s)
+        if self.obs_noise:   # static config branch — traced once, not lax.cond
+            # keyed off (state key, t): pure, per-timestep decorrelated, and
+            # consumes no key material (the episode key advances only on reset)
+            k = jax.random.fold_in(s.key, s.t)
+            obs = obs + self.obs_noise * jax.random.normal(k, obs.shape)
+        return obs
 
     def step(self, s: EnvState, action: Array):
         u = jnp.clip(action, -1.0, 1.0)
@@ -72,7 +97,7 @@ class ChainEnv:
         auxd, thetad = self._split(s.qd)
 
         # joint dynamics
-        thetadd = 8.0 * u - 2.0 * thetad - 4.0 * theta
+        thetadd = self.torque_gain * u - 2.0 * thetad - 4.0 * theta
         thetad_n = thetad + _DT * thetadd
         theta_n = theta + _DT * thetad_n
 
@@ -105,9 +130,9 @@ class ChainEnv:
 
         reward = v_n - self.ctrl_cost * jnp.sum(jnp.square(u))
         time_up = t_n >= self.spec.episode_length
-        fallen = jnp.logical_and(self.terminate_on_fall,
-                                 (aux_n[1] if self.n_aux >= 2 else 0.0)
-                                 < self.fall_height)
+        fallen = jnp.logical_and(
+            self.terminate_on_fall, (aux_n[1] if self.n_aux >= 2 else 0.0) < self.fall_height
+        )
         done = jnp.logical_or(time_up, fallen)
         return ns, self._obs(ns), reward.astype(jnp.float32), done
 
@@ -118,30 +143,36 @@ class ChainEnv17(ChainEnv):
     untracked root x / v slot), matching Gym's 'positions exclude root x'
     convention and the paper's dims exactly."""
 
-    def _obs(self, s: EnvState) -> Array:
+    def _obs_clean(self, s: EnvState) -> Array:
         aux, theta = self._split(s.q)
         auxd, thetad = self._split(s.qd)
         obs = jnp.concatenate([aux[1:], theta, auxd, thetad])
         assert obs.shape[0] == self.spec.obs_dim, (
-            f"{self.spec.name}: obs {obs.shape[0]} != {self.spec.obs_dim}")
+            f"{self.spec.name}: obs {obs.shape[0]} != {self.spec.obs_dim}"
+        )
         return obs.astype(jnp.float32)
 
 
-def make_halfcheetah() -> ChainEnv17:
+def make_halfcheetah(**scenario) -> ChainEnv17:
     # aux pos (h, pitch) [v-pos dropped] + θ(6) | auxd(3) + θd(6) = 17 ✓
     return ChainEnv17(
-        spec=EnvSpec("halfcheetah", obs_dim=17, act_dim=6),
-        n_joints=6, n_aux=3)
+        spec=EnvSpec("halfcheetah", obs_dim=17, act_dim=6), n_joints=6, n_aux=3, **scenario
+    )
 
 
-def make_hopper() -> ChainEnv17:
+def make_hopper(**scenario) -> ChainEnv17:
     # aux pos (h, pitch) + θ(3) | auxd(3) + θd(3) = 11 ✓ ; falls when h low
     return ChainEnv17(
         spec=EnvSpec("hopper", obs_dim=11, act_dim=3),
-        n_joints=3, n_aux=3, terminate_on_fall=True, fall_height=-0.7)
+        n_joints=3,
+        n_aux=3,
+        terminate_on_fall=True,
+        fall_height=-0.7,
+        **scenario,
+    )
 
 
-def make_swimmer() -> ChainEnv17:
+def make_swimmer(**scenario) -> ChainEnv17:
     # aux pos (pitch≡heading) [v dropped, no height] + θ(2) | auxd(2)+θd(2)=7…
     # Swimmer-v2 is 8: add height channel to aux (plays the role of lateral
     # drift): aux=(v,h) → pos (h) + θ(2) | auxd(2) + θd(2) = 7 — one short, so
@@ -149,16 +180,21 @@ def make_swimmer() -> ChainEnv17:
     # n_aux=2 with full obs (ChainEnv base): aux(2)+auxd(2)+θ(2)+θd(2)=8 ✓
     return ChainEnv(
         spec=EnvSpec("swimmer", obs_dim=8, act_dim=2),
-        n_joints=2, n_aux=2, ctrl_cost=1e-4)
+        n_joints=2,
+        n_aux=2,
+        ctrl_cost=1e-4,
+        **scenario,
+    )
 
 
-def make_pendulum() -> "PendulumEnv":
-    return PendulumEnv(spec=EnvSpec("pendulum", obs_dim=3, act_dim=1,
-                                    episode_length=200))
+def make_pendulum(**scenario) -> "PendulumEnv":
+    return PendulumEnv(
+        spec=EnvSpec("pendulum", obs_dim=3, act_dim=1, episode_length=200), **scenario
+    )
 
 
 @dataclasses.dataclass(frozen=True)
-class PendulumEnv:
+class PendulumEnv(FunctionalEnv):
     """Classic underactuated pendulum swing-up (exact dynamics, fast learning
     check for tests and the Fig. 7 harness)."""
 
@@ -167,12 +203,13 @@ class PendulumEnv:
     g: float = 10.0
     dt: float = 0.05
 
-    def reset(self, key):
+    def init(self, key):
         kq, kd, knext = jax.random.split(key, 3)
         th = jax.random.uniform(kq, (), minval=-jnp.pi, maxval=jnp.pi)
         thd = jax.random.uniform(kd, (), minval=-1.0, maxval=1.0)
-        state = EnvState(q=jnp.array([th]), qd=jnp.array([thd]),
-                         t=jnp.zeros((), jnp.int32), key=knext)
+        state = EnvState(
+            q=jnp.array([th]), qd=jnp.array([thd]), t=jnp.zeros((), jnp.int32), key=knext
+        )
         return state, self._obs(state)
 
     def _obs(self, s):
@@ -184,13 +221,11 @@ class PendulumEnv:
         u = jnp.clip(action[0], -1.0, 1.0) * self.max_torque
         norm_th = jnp.mod(th + jnp.pi, 2 * jnp.pi) - jnp.pi
         cost = norm_th ** 2 + 0.1 * thd ** 2 + 0.001 * u ** 2
-        thd_n = thd + self.dt * (-3 * self.g / 2 * jnp.sin(th + jnp.pi)
-                                 + 3.0 * u)
+        thd_n = thd + self.dt * (-3 * self.g / 2 * jnp.sin(th + jnp.pi) + 3.0 * u)
         thd_n = jnp.clip(thd_n, -8.0, 8.0)
         th_n = th + self.dt * thd_n
         t_n = s.t + 1
-        ns = EnvState(q=jnp.array([th_n]), qd=jnp.array([thd_n]), t=t_n,
-                      key=s.key)
+        ns = EnvState(q=jnp.array([th_n]), qd=jnp.array([thd_n]), t=t_n, key=s.key)
         done = t_n >= self.spec.episode_length
         return ns, self._obs(ns), (-cost).astype(jnp.float32), done
 
@@ -203,5 +238,12 @@ REGISTRY = {
 }
 
 
-def make(name: str):
-    return REGISTRY[name]()
+def make(name: str, **scenario):
+    """Build a registered env; scenario knobs (``torque_gain``,
+    ``obs_noise``, ...) pass through to the env dataclass, and
+    ``episode_length`` overrides the spec's horizon for any env."""
+    ep = scenario.pop("episode_length", None)
+    env = REGISTRY[name](**scenario)
+    if ep is not None:
+        env = dataclasses.replace(env, spec=dataclasses.replace(env.spec, episode_length=ep))
+    return env

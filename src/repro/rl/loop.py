@@ -7,12 +7,16 @@ Two execution modes:
     boundary each timestep, and we time the three Fig.-9 segments:
     env time / transfer (dispatch) time / accelerator compute time.
 
-  * ``fused`` — TPU-idiomatic (beyond-paper): env, replay, and the DDPG
-    update all live in one jitted+scanned program; zero host round-trips.
-    This is the mode the roofline/§Perf numbers use and what one would
-    deploy on a real pod (the CPU-emulated env becomes a JAX env farm).
+  * ``device`` — TPU-idiomatic (beyond-paper): a vmapped env fleet, the
+    replay buffer, exploration noise, and the DDPG update all live in one
+    jitted+scanned program — ``train_device`` runs an entire eval window
+    (act → explore → env-step → store → update × window) as a SINGLE
+    ``lax.scan`` launch with zero host round-trips.  ``train_fused`` is the
+    legacy chunked driver over the same scanned window.
 
-Both share the same DDPG update, QAT state, and replay semantics.
+Both share the same DDPG update, QAT state, replay semantics, and the
+``TrainConfig`` knobs; ``LoopConfig`` is the deprecated alias of
+``TrainConfig`` kept for one release (same fields, same defaults).
 """
 from __future__ import annotations
 
@@ -25,98 +29,236 @@ import jax
 import jax.numpy as jnp
 
 from repro.rl import ddpg, replay
-from repro.rl.envs.base import EnvState, auto_reset
+from repro.rl.envs.base import EnvState, env_init, init_fleet, step_fleet
+from repro.rl.noise import NoiseProcess, NoiseState
 
 Array = jax.Array
 
 
 @dataclasses.dataclass(frozen=True)
-class LoopConfig:
+class TrainConfig:
+    """One config for every training driver (`train_host` / `train_device` /
+    `train_fused`), mirroring `BatcherConfig` style: a single frozen —
+    hashable, therefore jit-static — dataclass instead of per-driver kwarg
+    sprawl.  Legacy call surfaces (`LoopConfig`, `train_fused(chunk=...)`)
+    normalize onto this through `as_train_config`, the one conversion path.
+    """
+
     total_steps: int = 10_000
     warmup_steps: int = 1_000          # env steps before updates start
     replay_capacity: int = 100_000
     eval_every: int = 5_000            # paper: evaluate every 5000 timesteps
     eval_episodes: int = 10            # paper: 10 random starts
-    n_envs: int = 1                    # fused mode can farm envs
+    n_envs: int = 1                    # device mode farms a vmapped fleet
     seed: int = 0
+    chunk: int = 1000                  # train_fused scan-window length
+    noise_kind: str = "gaussian"       # rl/noise process: gaussian|ou|none
+    noise_sigma: Optional[float] = None  # None -> dcfg.exploration_sigma
+
+
+# Deprecated alias (pre-redesign name), kept through one release.  Same
+# class on purpose: old constructor kwargs keep working and isinstance
+# checks stay true either way.
+LoopConfig = TrainConfig
+
+
+def as_train_config(cfg=None, **overrides) -> TrainConfig:
+    """The single normalization path from every legacy surface onto
+    `TrainConfig`: pass-through for `TrainConfig`/`LoopConfig`, field-copy
+    for duck-typed config objects, kwargs for dicts/None.  `overrides`
+    carries legacy per-call kwargs (e.g. `train_fused(chunk=...)`); only
+    non-None overrides win."""
+    if cfg is None:
+        cfg = TrainConfig()
+    elif isinstance(cfg, dict):
+        cfg = TrainConfig(**cfg)
+    elif not isinstance(cfg, TrainConfig):
+        names = (f.name for f in dataclasses.fields(TrainConfig))
+        cfg = TrainConfig(**{n: getattr(cfg, n) for n in names if hasattr(cfg, n)})
+    live = {k: v for k, v in overrides.items() if v is not None}
+    return dataclasses.replace(cfg, **live) if live else cfg
+
+
+def _noise_proc(cfg: TrainConfig, dcfg: ddpg.DDPGConfig) -> NoiseProcess:
+    sigma = dcfg.exploration_sigma if cfg.noise_sigma is None else cfg.noise_sigma
+    return NoiseProcess(kind=cfg.noise_kind, sigma=sigma)
 
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
 class TrainState:
     agent: ddpg.DDPGState
-    env_state: EnvState
-    obs: Array
+    env_state: EnvState      # fleet-batched (leading n_envs axis)
+    obs: Array               # (n_envs, obs_dim)
     buf: replay.ReplayBuffer
+    noise: NoiseState        # (n_envs, act_dim) exploration carry
     key: Array
 
 
-def init_train_state(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig) -> TrainState:
+def init_train_state(env, cfg: TrainConfig, dcfg: ddpg.DDPGConfig) -> TrainState:
+    cfg = as_train_config(cfg)
     key = jax.random.key(cfg.seed)
     k_agent, k_env, k_loop = jax.random.split(key, 3)
     agent = ddpg.init(k_agent, env.spec, dcfg)
-    if cfg.n_envs > 1:
-        env_keys = jax.random.split(k_env, cfg.n_envs)
-        env_state, obs = jax.vmap(env.reset)(env_keys)
-    else:
-        env_state, obs = env.reset(k_env)
-        obs = obs[None]
+    n = max(cfg.n_envs, 1)
+    env_state, obs = init_fleet(env, k_env, n)
     buf = replay.init(cfg.replay_capacity, env.spec.obs_dim, env.spec.act_dim)
-    return TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf,
-                      key=k_loop)
+    nz = _noise_proc(cfg, dcfg).init((n, env.spec.act_dim))
+    return TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, noise=nz, key=k_loop)
 
 
-def _one_timestep(ts: TrainState, env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig
-                  ) -> tuple[TrainState, dict[str, Array]]:
+# --------------------------------------------------------------------- #
+# The shared rollout core: batched act (+ optional exploration) and the
+# vmapped env transition.  `_eval_episodes`, the scanned training window,
+# and `train_host`'s per-step section all go through these two helpers —
+# no near-copies of the act→step chain.
+# --------------------------------------------------------------------- #
+
+def _act_explore(
+    agent: ddpg.DDPGState,
+    obs: Array,
+    nz: NoiseState,
+    k_noise: Array,
+    *,
+    proc: NoiseProcess,
+    dcfg: ddpg.DDPGConfig,
+) -> tuple[NoiseState, Array]:
+    """Actor forward + exploration noise  [FPGA FP + PRNG of Fig. 2]."""
+    nz, eps = proc.sample(nz, k_noise)
+    return nz, ddpg.act(agent, obs, cfg=dcfg, noise=eps)
+
+
+def _policy_env_step(
+    agent: ddpg.DDPGState,
+    env_state: EnvState,
+    obs: Array,
+    *,
+    env,
+    dcfg: ddpg.DDPGConfig,
+    autoreset: bool = True,
+) -> tuple[EnvState, Array, Array, Array, Array]:
+    """One greedy act → vmapped env-step over a fleet; auto-reset keeps
+    done lanes in lockstep (training), `autoreset=False` leaves terminal
+    states in place (evaluation stops counting via its alive mask)."""
+    action = ddpg.act(agent, obs, cfg=dcfg)
+    env_state, next_obs, reward, done = step_fleet(env, env_state, action, autoreset=autoreset)
+    return env_state, next_obs, reward, done, action
+
+
+def _one_timestep(
+    ts: TrainState, env, cfg: TrainConfig, dcfg: ddpg.DDPGConfig
+) -> tuple[TrainState, dict[str, Array]]:
     key, k_noise, k_sample = jax.random.split(ts.key, 3)
 
     # 1. actor forward (inference) + exploration noise  [FPGA FP + PRNG]
-    action = ddpg.act(ts.agent, ts.obs, cfg=dcfg, noise_key=k_noise)
+    nz, action = _act_explore(
+        ts.agent, ts.obs, ts.noise, k_noise, proc=_noise_proc(cfg, dcfg), dcfg=dcfg
+    )
 
-    # 2. environment transition                          [host CPU in paper]
-    if cfg.n_envs > 1:
-        env_state, next_obs, reward, done = jax.vmap(partial(auto_reset, env))(
-            ts.env_state, action)
-    else:
-        env_state, next_obs, reward, done = auto_reset(env, ts.env_state,
-                                                       action[0])
-        next_obs, reward, done = next_obs[None], reward[None], done[None]
+    # 2. environment transition (vmapped fleet)          [host CPU in paper]
+    env_state, next_obs, reward, done = step_fleet(env, ts.env_state, action)
 
-    # 3. store transition                                [host replay memory]
-    buf = replay.add(ts.buf, ts.obs, action, reward, next_obs, done)
+    # 3. store the fleet's transitions                   [host replay memory]
+    buf = replay.add_batch(
+        ts.buf,
+        {"obs": ts.obs, "action": action, "reward": reward, "next_obs": next_obs, "done": done},
+    )
 
     # 4. sample batch + 5. critic/actor BP+WU            [FPGA training]
     batch = replay.sample(buf, k_sample, dcfg.batch_size)
+    do_update = buf.size >= cfg.warmup_steps
 
-    def do_update(agent):
+    def run_update(agent):
         new_agent, m = ddpg.update(agent, batch, dcfg)
         return new_agent, m
 
     def skip_update(agent):
-        zero = {"critic_loss": jnp.float32(0), "actor_loss": jnp.float32(0),
-                "q_mean": jnp.float32(0)}
+        zero = {
+            "critic_loss": jnp.float32(0), "actor_loss": jnp.float32(0), "q_mean": jnp.float32(0)
+        }
         return agent, zero
 
-    agent, metrics = jax.lax.cond(buf.size >= cfg.warmup_steps,
-                                  do_update, skip_update, ts.agent)
+    agent, metrics = jax.lax.cond(do_update, run_update, skip_update, ts.agent)
     metrics["reward"] = jnp.mean(reward)
-    return TrainState(agent=agent, env_state=env_state, obs=next_obs,
-                      buf=buf, key=key), metrics
+    metrics["did_update"] = do_update.astype(jnp.int32)
+    ts = TrainState(
+        agent=agent, env_state=env_state, obs=next_obs, buf=buf, noise=nz, key=key
+    )
+    return ts, metrics
 
 
-def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
-                eval_fn: Optional[Callable] = None,
-                chunk: int = 1000) -> tuple[TrainState, dict[str, Any]]:
-    """Fused scan training. Returns final state + history of eval rewards."""
+@partial(jax.jit, static_argnames=("env", "cfg", "dcfg", "window"), donate_argnums=(0,))
+def _train_window(
+    ts: TrainState, *, env, cfg: TrainConfig, dcfg: ddpg.DDPGConfig, window: int
+) -> tuple[TrainState, dict[str, Array]]:
+    """`window` full FIXAR timesteps — act → explore → env-step → store →
+    update — as ONE `lax.scan` inside ONE jitted launch.  Module-level jit
+    with `env`/`cfg`/`dcfg`/`window` as static keys: repeated windows (and
+    every driver sharing this helper) hit the cache instead of re-tracing
+    the scanned body — the retrace regression is pinned in
+    tests/test_loop.py."""
+    def body(carry, _):
+        carry, m = _one_timestep(carry, env, cfg, dcfg)
+        return carry, (m["reward"], m["did_update"])
+
+    ts, (rewards, updates) = jax.lax.scan(body, ts, None, length=window)
+    return ts, {"reward": jnp.mean(rewards), "updates": jnp.sum(updates)}
+
+
+def train_device(
+    env,
+    cfg: Optional[TrainConfig] = None,
+    dcfg: Optional[ddpg.DDPGConfig] = None,
+    *,
+    eval_fn: Optional[Callable] = None,
+) -> tuple[TrainState, dict[str, Any]]:
+    """Fully device-resident training: each eval window (`cfg.eval_every`
+    timesteps x `cfg.n_envs` fleet lanes) runs as a single jitted
+    `lax.scan` launch — the host only reads back the window's scalar
+    metrics and runs the (also single-launch) evaluation.  Updates
+    dispatch through whatever `dcfg.backend` names (`jnp` autodiff, the
+    `pallas` custom-VJP pair, or the two-launch `pallas_fused_step`).
+
+    History per window: `step`, `eval_reward`, `train_reward` (window mean
+    fleet reward), `ips` (env-steps/s = window x n_envs / wall), and
+    `updates_per_s` (post-warmup updates / wall).
+    """
+    cfg = as_train_config(cfg)
+    dcfg = ddpg.DDPGConfig() if dcfg is None else dcfg
     ts = init_train_state(env, cfg, dcfg)
+    evaluator = evaluate if eval_fn is None else eval_fn
+    history = {"step": [], "eval_reward": [], "train_reward": [], "ips": [], "updates_per_s": []}
+    steps_done = 0
+    while steps_done < cfg.total_steps:
+        window = min(cfg.eval_every, cfg.total_steps - steps_done)
+        t0 = time.perf_counter()
+        ts, stats = _train_window(ts, env=env, cfg=cfg, dcfg=dcfg, window=window)
+        jax.block_until_ready(stats["reward"])
+        dt = time.perf_counter() - t0
+        steps_done += window
+        k_eval = jax.random.fold_in(jax.random.key(cfg.seed + 7), steps_done)
+        ev = evaluator(env, ts.agent, dcfg, k_eval, cfg.eval_episodes)
+        history["step"].append(steps_done)
+        history["eval_reward"].append(float(ev))
+        history["train_reward"].append(float(stats["reward"]))
+        history["ips"].append(window * max(cfg.n_envs, 1) / dt)
+        history["updates_per_s"].append(int(stats["updates"]) / dt)
+    return ts, history
 
-    @partial(jax.jit, donate_argnums=0)
-    def run_chunk(ts):
-        def body(carry, _):
-            carry, m = _one_timestep(carry, env, cfg, dcfg)
-            return carry, m["reward"]
-        ts, rewards = jax.lax.scan(body, ts, None, length=chunk)
-        return ts, jnp.mean(rewards)
+
+def train_fused(
+    env,
+    cfg: TrainConfig,
+    dcfg: ddpg.DDPGConfig,
+    eval_fn: Optional[Callable] = None,
+    chunk: Optional[int] = None,
+) -> tuple[TrainState, dict[str, Any]]:
+    """Legacy chunked driver over the same scanned window as
+    `train_device` (the `chunk` kwarg keeps working and overrides
+    `cfg.chunk`).  Returns final state + history of eval rewards."""
+    cfg = as_train_config(cfg, chunk=chunk)
+    ts = init_train_state(env, cfg, dcfg)
+    evaluator = evaluate if eval_fn is None else eval_fn
 
     history = {"step": [], "eval_reward": [], "train_reward": [], "ips": []}
     steps_done = 0
@@ -126,17 +268,18 @@ def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
     win_reward, win_chunks, win_steps, win_secs = 0.0, 0, 0, 0.0
     while steps_done < cfg.total_steps:
         t0 = time.perf_counter()
-        ts, mean_r = run_chunk(ts)
+        ts, stats = _train_window(ts, env=env, cfg=cfg, dcfg=dcfg, window=cfg.chunk)
+        mean_r = stats["reward"]
         jax.block_until_ready(mean_r)
         dt = time.perf_counter() - t0
-        steps_done += chunk
+        steps_done += cfg.chunk
         win_reward += float(mean_r)
         win_chunks += 1
-        win_steps += chunk * max(cfg.n_envs, 1)
+        win_steps += cfg.chunk * max(cfg.n_envs, 1)
         win_secs += dt
-        if steps_done % cfg.eval_every < chunk:
+        if steps_done % cfg.eval_every < cfg.chunk:
             k_eval = jax.random.fold_in(jax.random.key(cfg.seed + 7), steps_done)
-            ev = evaluate(env, ts.agent, dcfg, k_eval, cfg.eval_episodes)
+            ev = evaluator(env, ts.agent, dcfg, k_eval, cfg.eval_episodes)
             history["step"].append(steps_done)
             history["eval_reward"].append(float(ev))
             history["train_reward"].append(win_reward / win_chunks)
@@ -145,13 +288,15 @@ def train_fused(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig,
     return ts, history
 
 
-def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
-               learner=None, tracer=None, observability=None
-               ) -> tuple[TrainState, dict[str, Any]]:
+def train_host(
+    env, cfg: TrainConfig, dcfg: ddpg.DDPGConfig, *, learner=None, tracer=None, observability=None
+) -> tuple[TrainState, dict[str, Any]]:
     """Paper-faithful host loop with the Fig.-9 timing breakdown.
 
     Each timestep: host env step (CPU), device_put of the sampled batch
     (the PCIe import), then the jitted inference+update (the accelerator).
+    Shares `TrainConfig` (and the act/explore/env-transition helpers) with
+    `train_device`; `n_envs > 1` steps a host-driven fleet.
 
     `learner` (optional) is a `train/learner.LearnerEngine` (or anything
     with its `load_state`/`run_update`/`state` surface): when given, the
@@ -172,38 +317,49 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
     /healthz while training, and the tracer is flushed on exit — normal
     or aborted — so the trace always lands on disk.
     """
+    cfg = as_train_config(cfg)
     if observability is not None:
         if tracer is None:
             tracer = observability.tracer
         observability.ensure_server()
     ts = init_train_state(env, cfg, dcfg)
-    act_jit = jax.jit(partial(ddpg.act, cfg=dcfg))
+    proc = _noise_proc(cfg, dcfg)
+    act_jit = jax.jit(partial(_act_explore, proc=proc, dcfg=dcfg))
     upd_jit = jax.jit(partial(ddpg.update, cfg=dcfg))
     sample_jit = jax.jit(partial(replay.sample, batch=dcfg.batch_size))
-    add_jit = jax.jit(replay.add)
+    add_jit = jax.jit(replay.add_batch)
     if learner is not None:
         learner.load_state(ts.agent)
 
     times = {"env": 0.0, "runtime": 0.0, "accelerator": 0.0}
     key = ts.key
-    agent, env_state, obs, buf = ts.agent, ts.env_state, ts.obs, ts.buf
+    agent, env_state, obs, buf, nz = (ts.agent, ts.env_state, ts.obs, ts.buf, ts.noise)
     try:
         for step in range(cfg.total_steps):
             key, k_noise, k_sample = jax.random.split(key, 3)
 
             t0 = time.perf_counter()
-            action = act_jit(agent, obs, noise_key=k_noise)
+            nz, action = act_jit(agent, obs, nz, k_noise)
             jax.block_until_ready(action)
             t1 = time.perf_counter()
 
-            env_state, next_obs, reward, done = auto_reset(env, env_state,
-                                                           action[0])
+            # the env fleet steps OUTSIDE the jitted region (eager vmap):
+            # the paper's host-side simulator boundary
+            env_state, next_obs, reward, done = step_fleet(env, env_state, action)
             jax.block_until_ready(next_obs)
             t2 = time.perf_counter()
 
             # replay add + batch sample + "PCIe import" (device transfer)
-            buf = add_jit(buf, obs, action, reward[None], next_obs[None],
-                          done[None])
+            buf = add_jit(
+                buf,
+                {
+                    "obs": obs,
+                    "action": action,
+                    "reward": reward,
+                    "next_obs": next_obs,
+                    "done": done,
+                },
+            )
             batch = sample_jit(buf, k_sample)
             if learner is None:
                 batch = jax.device_put(batch)
@@ -233,50 +389,56 @@ def train_host(env, cfg: LoopConfig, dcfg: ddpg.DDPGConfig, *,
             if tracer is not None and tracer.enabled:
                 tracer.complete("loop.act", t0, t1, cat="loop", step=step)
                 tracer.complete("loop.env", t1, t2, cat="loop", step=step)
-                tracer.complete("loop.replay", t2, t3, cat="loop",
-                                step=step)
+                tracer.complete("loop.replay", t2, t3, cat="loop", step=step)
                 if t4 > t3:
-                    tracer.complete("loop.update", t3, t4, cat="loop",
-                                    step=step)
-            obs = next_obs[None]
+                    tracer.complete("loop.update", t3, t4, cat="loop", step=step)
+            obs = next_obs
     finally:
         if observability is not None:
             observability.flush()
 
-    ts = TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, key=key)
+    ts = TrainState(agent=agent, env_state=env_state, obs=obs, buf=buf, noise=nz, key=key)
     return ts, {"times": times, "total_steps": cfg.total_steps}
 
 
 @partial(jax.jit, static_argnames=("env", "dcfg"))
-def _eval_episodes(agent: ddpg.DDPGState, keys: Array, *, env,
-                   dcfg: ddpg.DDPGConfig) -> Array:
+def _eval_episodes(agent: ddpg.DDPGState, keys: Array, *, env, dcfg: ddpg.DDPGConfig) -> Array:
     """Module-level jitted eval body — hoisted out of `evaluate` so repeat
     eval calls hit the jit cache instead of re-tracing the full episode
     scan (a closure-defined `@jax.jit` function is a fresh function object,
     and therefore a fresh trace, on every call).  `env` and `dcfg` are
     frozen dataclasses, hence hashable static keys; `agent` and `keys` are
-    traced, so evolving params never retrace."""
-    def one_episode(k):
-        state, obs = env.reset(k)
+    traced, so evolving params never retrace.
 
-        def body(carry, _):
-            state, obs, total, alive = carry
-            a = ddpg.act(agent, obs[None], cfg=dcfg)[0]
-            state, obs, r, done = env.step(state, a)
-            total = total + r * alive
-            alive = alive * (1.0 - done.astype(jnp.float32))
-            return (state, obs, total, alive), None
+    The episodes run as a FLEET: vmapped `init` over the episode keys, then
+    one scan of the shared `_policy_env_step` rollout core (no auto-reset —
+    a finished episode parks while `alive` masks its rewards out), so this
+    is the same act→step program the scanned training window runs, minus
+    exploration/store/update."""
+    env_state, obs = jax.vmap(partial(env_init, env))(keys)
+    n = keys.shape[0]
 
-        (_, _, total, _), _ = jax.lax.scan(
-            body, (state, obs, jnp.float32(0), jnp.float32(1)), None,
-            length=env.spec.episode_length)
-        return total
+    def body(carry, _):
+        env_state, obs, total, alive = carry
+        env_state, obs, r, done, _ = _policy_env_step(
+            agent, env_state, obs, env=env, dcfg=dcfg, autoreset=False
+        )
+        total = total + r * alive
+        alive = alive * (1.0 - done.astype(jnp.float32))
+        return (env_state, obs, total, alive), None
 
-    return jnp.mean(jax.vmap(one_episode)(keys))
+    (_, _, total, _), _ = jax.lax.scan(
+        body,
+        (env_state, obs, jnp.zeros(n, jnp.float32), jnp.ones(n, jnp.float32)),
+        None,
+        length=env.spec.episode_length,
+    )
+    return jnp.mean(total)
 
 
-def evaluate(env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array,
-             n_episodes: int = 10) -> Array:
+def evaluate(
+    env, agent: ddpg.DDPGState, dcfg: ddpg.DDPGConfig, key: Array, n_episodes: int = 10
+) -> Array:
     """Paper protocol: average cumulative reward over `n_episodes` random
     starts, accumulating until the agent falls (done) or the episode ends."""
     keys = jax.random.split(key, n_episodes)

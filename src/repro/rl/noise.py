@@ -1,31 +1,106 @@
-"""Exploration noise — the PRNG module of Fig. 2."""
+"""Exploration noise — the PRNG module of Fig. 2, as pure functions.
+
+The redesigned surface mirrors the functional env API (``envs/base.py``):
+a frozen ``NoiseProcess`` config plus an explicit ``NoiseState`` carry,
+
+    proc = NoiseProcess(kind="ou", sigma=0.2)
+    state = proc.init((n_envs, act_dim))
+    state, eps = proc.sample(state, key)        # pure, key-threaded
+
+so exploration composes with ``vmap``/``scan`` and rides inside the
+device-resident training loop (``rl/loop.train_device``) with no hidden
+host state.  ``kind="gaussian"`` is stateless i.i.d. noise (the carry is
+returned untouched); ``kind="ou"`` is the Ornstein-Uhlenbeck process of
+the original DDPG paper; ``kind="none"`` disables exploration (greedy).
+
+The pre-redesign free functions (``ou_init`` / ``ou_step`` / ``gaussian``)
+are kept as deprecation shims over the same implementation — old-vs-new
+parity is pinned in tests/test_noise.py.
+"""
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
 
 Array = jax.Array
 
+KINDS = ("gaussian", "ou", "none")
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass
-class OUState:
-    x: Array
+class NoiseState:
+    x: Array    # process carry: the OU state; unused (zeros) for iid kinds
 
 
-def ou_init(shape) -> OUState:
-    return OUState(x=jnp.zeros(shape, jnp.float32))
+@dataclasses.dataclass(frozen=True)
+class NoiseProcess:
+    """Static exploration-noise config; ``init``/``sample`` are pure."""
+
+    kind: str = "gaussian"   # "gaussian" | "ou" | "none"
+    sigma: float = 0.1       # gaussian stddev / OU volatility
+    theta: float = 0.15      # OU mean-reversion rate
+    dt: float = 1e-2         # OU integration step
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"unknown noise kind {self.kind!r}; expected one of {KINDS}")
+
+    def init(self, shape) -> NoiseState:
+        return NoiseState(x=jnp.zeros(shape, jnp.float32))
+
+    def sample(self, state: NoiseState, key: Array) -> tuple[NoiseState, Array]:
+        """One noise draw of ``state.x.shape`` -> (new_state, eps).
+
+        Pure in (state, key): the carry is advanced explicitly, so fleets
+        vmap over a batched ``NoiseState`` and scans thread it alongside
+        the env state.  The ``kind`` branch is static config — each kind
+        traces to a branch-free program.
+        """
+        if self.kind == "none":
+            return state, jnp.zeros_like(state.x)
+        if self.kind == "gaussian":
+            return state, self.sigma * jax.random.normal(key, state.x.shape)
+        noise = jax.random.normal(key, state.x.shape)
+        x = state.x + self.theta * (-state.x) * self.dt + self.sigma * jnp.sqrt(self.dt) * noise
+        return NoiseState(x=x), x
 
 
-def ou_step(state: OUState, key: Array, *, theta: float = 0.15,
-            sigma: float = 0.2, dt: float = 1e-2) -> tuple[OUState, Array]:
-    """Ornstein-Uhlenbeck process (DDPG's exploration noise)."""
-    noise = jax.random.normal(key, state.x.shape)
-    x = state.x + theta * (-state.x) * dt + sigma * jnp.sqrt(dt) * noise
-    return OUState(x=x), x
+# --------------------------------------------------------------------- #
+# Deprecation shims — the pre-redesign free-function surface.
+# --------------------------------------------------------------------- #
+
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.rl.noise.{old} is deprecated; use {new}", DeprecationWarning, stacklevel=3
+    )
+
+
+def ou_init(shape) -> NoiseState:
+    """Deprecated: use ``NoiseProcess(kind='ou').init(shape)``."""
+    _warn("ou_init", "NoiseProcess(kind='ou').init(shape)")
+    return NoiseProcess(kind="ou").init(shape)
+
+
+def ou_step(
+    state: NoiseState, key: Array, *, theta: float = 0.15, sigma: float = 0.2, dt: float = 1e-2
+) -> tuple[NoiseState, Array]:
+    """Deprecated: use ``NoiseProcess(kind='ou', ...).sample(state, key)``."""
+    _warn("ou_step", "NoiseProcess(kind='ou', ...).sample(state, key)")
+    proc = NoiseProcess(kind="ou", sigma=sigma, theta=theta, dt=dt)
+    return proc.sample(state, key)
 
 
 def gaussian(key: Array, shape, sigma: float = 0.1) -> Array:
-    return sigma * jax.random.normal(key, shape)
+    """Deprecated: use ``NoiseProcess(kind='gaussian', sigma=...).sample``."""
+    _warn("gaussian", "NoiseProcess(kind='gaussian', sigma=...).sample")
+    proc = NoiseProcess(kind="gaussian", sigma=sigma)
+    _, eps = proc.sample(proc.init(shape), key)
+    return eps
+
+
+# the old OUState name aliased the same single-field carry
+OUState = NoiseState

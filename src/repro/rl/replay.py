@@ -1,5 +1,13 @@
 """On-device ring-buffer replay (the host-side transition store of Fig. 2,
 moved on-device for the fused loop; the host loop keeps it on CPU arrays).
+
+Every function here is pure in its array arguments and shape-static, so the
+buffer composes with ``jit``/``vmap``/``lax.scan``: ``rl/loop.train_device``
+carries the whole ``ReplayBuffer`` through its scanned act→store→update
+chain and the buffer never leaves the device.  ``add``/``add_batch`` store a
+batch of transitions (``add_batch`` takes the same dict layout ``sample``
+returns and ``ddpg.update`` consumes, making store/sample symmetric);
+``sample`` draws a uniform random batch.
 """
 from __future__ import annotations
 
@@ -49,7 +57,7 @@ def add(buf: ReplayBuffer, obs, action, reward, next_obs, done) -> ReplayBuffer:
     b = obs.shape[0]
     cap = buf.obs.shape[0]
     keep = min(b, cap)                       # static: shapes are concrete
-    tail = lambda x: x[b - keep:]            # newest `keep` rows win
+    tail = lambda x: x[b - keep :]            # newest `keep` rows win
     idx = (buf.ptr + (b - keep) + jnp.arange(keep)) % cap
     return ReplayBuffer(
         obs=buf.obs.at[idx].set(tail(obs)),
@@ -59,6 +67,16 @@ def add(buf: ReplayBuffer, obs, action, reward, next_obs, done) -> ReplayBuffer:
         done=buf.done.at[idx].set(tail(done)),
         ptr=(buf.ptr + b) % cap,
         size=jnp.minimum(buf.size + b, cap),
+    )
+
+
+def add_batch(buf: ReplayBuffer, batch: dict[str, Array]) -> ReplayBuffer:
+    """`add` in the dict transition layout (`obs`/`action`/`reward`/
+    `next_obs`/`done`, each with a leading batch axis) — the layout `sample`
+    returns and `ddpg.update` consumes.  Pure and jit/scan-safe; the scanned
+    device loop stores its per-step fleet transitions through this."""
+    return add(
+        buf, batch["obs"], batch["action"], batch["reward"], batch["next_obs"], batch["done"]
     )
 
 

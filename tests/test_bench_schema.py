@@ -26,7 +26,8 @@ def _load(name):
 
 @pytest.mark.parametrize("name", ["BENCH_fused_mlp.json",
                                   "BENCH_serve_policy.json",
-                                  "BENCH_learner.json"])
+                                  "BENCH_learner.json",
+                                  "BENCH_device_loop.json"])
 def test_checked_in_artifacts_validate(name):
     path = REPO / name
     assert path.exists(), f"{name} missing at repo root"
@@ -112,6 +113,37 @@ def test_learner_drift_fails():
         mutate(bad)
         with pytest.raises(bench_schema.SchemaError):
             bench_schema.validate_report(bad)
+
+
+def test_device_loop_drift_fails():
+    """The loop artifact's contract: an `n_envs` scaling curve with at
+    least two fleet widths, the host-vs-device updates/s comparison, and
+    the single-launch trace count."""
+    good = _load("BENCH_device_loop.json")
+    bench_schema.validate_report(good)
+    first = next(iter(good["scaling"]))
+    for mutate in (
+        lambda d: d.pop("scaling"),
+        lambda d: d.pop("host_vs_device"),
+        lambda d: d.pop("launches"),
+        lambda d: d["scaling"].clear()
+        or d["scaling"].update({first: good["scaling"][first]}),  # one point
+        lambda d: d["scaling"][first].pop("env_steps_per_s"),
+        lambda d: d["scaling"][first].pop("updates_per_s"),
+        lambda d: d["host_vs_device"].pop("speedup"),
+        lambda d: d["host_vs_device"].pop("host_updates_per_s"),
+        lambda d: d["launches"].pop("windows_traced_per_config"),
+        lambda d: d["config"].update(n_envs=[1]),          # no curve
+        lambda d: d["config"].update(n_envs="1,16,1024"),  # type drift
+        lambda d: d.update(schema="fixar/device_loop_bench/v0"),  # old tag
+    ):
+        bad = copy.deepcopy(good)
+        mutate(bad)
+        with pytest.raises(bench_schema.SchemaError):
+            bench_schema.validate_report(
+                bad, bench_schema.DEVICE_LOOP_SCHEMA
+                if bad.get("schema") != "fixar/device_loop_bench/v1"
+                else None)
 
 
 def test_fallback_validator_agrees_with_jsonschema():

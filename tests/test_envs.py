@@ -9,6 +9,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.rl.envs.base import (auto_reset, env_init, init_fleet, step_auto,
+                                step_fleet)
 from repro.rl.envs.locomotion import REGISTRY, make
 
 ENVS = list(REGISTRY)
@@ -81,3 +83,157 @@ def test_hopper_falls():
                             t=state.t, key=state.key)
     state, obs, r, done = env.step(state, jnp.zeros((3,)))
     assert bool(done)
+
+
+# --------------------------------------------------------------------- #
+# functional protocol: init/reset compat, vmap bit-parity, auto-reset
+# --------------------------------------------------------------------- #
+
+def _arr(x):
+    x = jnp.asarray(x)
+    if jnp.issubdtype(x.dtype, jax.dtypes.prng_key):
+        x = jax.random.key_data(x)
+    return np.asarray(x)
+
+
+def _eq(a, b):
+    return np.array_equal(_arr(a), _arr(b))
+
+
+def _tree_eq(a, b):
+    return all(jax.tree.leaves(jax.tree.map(_eq, a, b)))
+
+
+@pytest.mark.parametrize("name", ENVS)
+def test_init_and_legacy_reset_agree_bitwise(name):
+    """The compat shim: `reset` is an alias of `init`, and `env_init`
+    resolves either spelling to the same episode."""
+    env = make(name)
+    key = jax.random.key(5)
+    s1, o1 = env.init(key)
+    s2, o2 = env.reset(key)
+    s3, o3 = env_init(env, key)
+    assert _eq(o1, o2) and _eq(o1, o3)
+    assert _tree_eq(s1, s2) and _tree_eq(s1, s3)
+
+
+def test_env_init_falls_back_to_reset_only_envs():
+    class OldStyle:
+        def reset(self, key):
+            return "state", "obs"
+
+    assert env_init(OldStyle(), jax.random.key(0)) == ("state", "obs")
+
+
+@pytest.mark.parametrize("name", ENVS)
+@hypothesis.given(st.integers(0, 2 ** 31 - 1))
+@hypothesis.settings(max_examples=3, deadline=None)
+def test_vmapped_step_matches_single_env_bitwise(name, seed):
+    """The property the fleet is built on: `init_fleet`/`step_fleet` over
+    B lanes == B independent single-env rollouts, bit for bit."""
+    env = make(name)
+    B = 5
+    key = jax.random.key(seed)
+    keys = jax.random.split(key, B)
+    fs, fo = init_fleet(env, key, B)
+    singles = [env_init(env, k) for k in keys]
+    for i, (s_i, o_i) in enumerate(singles):
+        assert _eq(fo[i], o_i), i
+        assert _tree_eq(jax.tree.map(lambda x: x[i], fs), s_i), i
+
+    actions = jax.random.uniform(jax.random.fold_in(key, 1),
+                                 (3, B, env.spec.act_dim), minval=-1,
+                                 maxval=1)
+    for t in range(3):
+        fs, fo, fr, fd = step_fleet(env, fs, actions[t], autoreset=False)
+        for i in range(B):
+            s_i, o_i, r_i, d_i = env.step(singles[i][0], actions[t, i])
+            singles[i] = (s_i, o_i)
+            assert _eq(fo[i], o_i) and _eq(fr[i], r_i) and _eq(fd[i], d_i), \
+                (t, i)
+            assert _tree_eq(jax.tree.map(lambda x: x[i], fs), s_i), (t, i)
+
+
+def test_auto_reset_restarts_done_lane_only():
+    """One lane of a fleet hits its episode-length truncation: that lane
+    restarts at t=0 in place (no desync, no host round trip) while the
+    other lanes step normally — and its restart matches a plain `init`
+    from the reset key the stepped lane would have split."""
+    env = make("pendulum")
+    B = 3
+    fs, fo = init_fleet(env, jax.random.key(0), B)
+    # push lane 1 to the brink of truncation (t = L-1 -> done at next step)
+    t = fs.t.at[1].set(env.spec.episode_length - 1)
+    fs = fs.__class__(q=fs.q, qd=fs.qd, t=t, key=fs.key)
+    a = jnp.zeros((B, env.spec.act_dim))
+    ns, no, nr, nd = step_fleet(env, fs, a)      # autoreset=True default
+    assert list(np.asarray(nd)) == [False, True, False]
+    # non-done lanes: plain step, t advanced
+    assert list(np.asarray(ns.t)[[0, 2]]) == [1, 1]
+    # done lane: fresh episode (post-reset state/obs), t back to 0
+    assert int(ns.t[1]) == 0
+    lane1 = jax.tree.map(lambda x: x[1], fs)
+    stepped, _, r_ref, d_ref = env.step(lane1, a[1])
+    assert bool(d_ref) and _eq(nr[1], r_ref)      # reward is pre-reset
+    _, k_reset = jax.random.split(stepped.key)
+    rs, ro = env.init(k_reset)
+    assert _eq(no[1], ro)
+    assert _tree_eq(jax.tree.map(lambda x: x[1], ns), rs)
+
+
+def test_auto_reset_on_terminal_fall():
+    """Termination (hopper falls) auto-resets exactly like truncation."""
+    env = make("hopper")
+    s, o = env_init(env, jax.random.key(0))
+    s = s.__class__(q=s.q.at[1].set(-2.0), qd=s.qd, t=s.t, key=s.key)
+    ns, no, r, d = step_auto(env, s, jnp.zeros((3,)))
+    assert bool(d)
+    assert int(ns.t) == 0                         # fresh episode
+    assert float(jnp.abs(ns.q).max()) < 1.0       # not the fallen pose
+    assert bool(jnp.all(jnp.isfinite(no)))
+
+
+def test_auto_reset_alias_is_step_auto():
+    assert auto_reset is step_auto
+
+
+def test_fleet_rollout_never_desynchronizes():
+    """Scan a random policy across several truncation boundaries: with
+    auto-reset every lane's t stays within [0, L) forever and obs stay
+    finite — the fleet-lockstep invariant of the device loop."""
+    env = make("pendulum", episode_length=7)
+    B = 4
+    fs, fo = init_fleet(env, jax.random.key(2), B)
+
+    def body(carry, k):
+        fs, fo = carry
+        a = jax.random.uniform(k, (B, env.spec.act_dim), minval=-1, maxval=1)
+        fs, fo, r, d = step_fleet(env, fs, a)
+        return (fs, fo), (fs.t, d)
+
+    (_, _), (ts, ds) = jax.lax.scan(body, (fs, fo),
+                                    jax.random.split(jax.random.key(3), 40))
+    ts = np.asarray(ts)
+    assert ts.min() >= 0 and ts.max() < env.spec.episode_length
+    # every lane wrapped at least once over 40 steps of 7-step episodes
+    assert np.asarray(ds).sum(axis=0).min() >= 1
+
+
+def test_scenario_knobs_are_config():
+    """Randomized dynamics / observation noise as config, not a port:
+    non-default `torque_gain`/`obs_noise` change the trajectory while the
+    defaults stay bitwise identical to the pre-redesign envs."""
+    base = make("swimmer")
+    hot = make("swimmer", torque_gain=12.0)
+    noisy = make("swimmer", obs_noise=0.1)
+    key = jax.random.key(11)
+    s0, o0 = base.init(key)
+    s1, o1 = hot.init(key)
+    s2, o2 = noisy.init(key)
+    assert _eq(o0, o1)          # init identical; dynamics differ on step
+    assert not _eq(o0, o2)      # obs noise applies from the first obs
+    a = jnp.full((base.spec.act_dim,), 0.5)
+    _, ob, rb, _ = base.step(s0, a)
+    _, oh, rh, _ = hot.step(s1, a)
+    assert not _eq(ob, oh)
+    assert make("hopper", episode_length=7).spec.episode_length == 7

@@ -103,6 +103,100 @@ def test_train_fused_history_accumulates_across_eval_window(monkeypatch):
 # train_host: optional learner streaming
 # --------------------------------------------------------------------- #
 
+def test_train_config_normalization_single_path():
+    """Every legacy surface lands on the same frozen TrainConfig."""
+    assert loop.LoopConfig is loop.TrainConfig          # deprecated alias
+    base = loop.TrainConfig(total_steps=7, chunk=3)
+    assert loop.as_train_config(base) is base           # pass-through
+    assert loop.as_train_config(None) == loop.TrainConfig()
+    assert loop.as_train_config({"total_steps": 7, "chunk": 3}) == base
+    # duck-typed config object (e.g. a user's own dataclass): field copy
+    duck = dataclasses.make_dataclass(
+        "Duck", [("total_steps", int, 7), ("chunk", int, 3)])()
+    assert loop.as_train_config(duck) == base
+    # per-call kwargs override only when not None (train_fused(chunk=...))
+    assert loop.as_train_config(base, chunk=5).chunk == 5
+    assert loop.as_train_config(base, chunk=None).chunk == 3
+    with pytest.raises(dataclasses.FrozenInstanceError):
+        base.chunk = 9
+
+
+# --------------------------------------------------------------------- #
+# train_device: single-launch windows + host/device parity
+# --------------------------------------------------------------------- #
+
+_SMALL = dict(total_steps=24, warmup_steps=8, replay_capacity=64,
+              eval_every=12, eval_episodes=2, seed=3)
+
+
+def test_train_window_traces_once_across_windows_and_drivers():
+    """The tentpole claim, pinned: an entire eval window is ONE jitted
+    launch, and every window — across `train_device` calls and the legacy
+    `train_fused` driver at the same shapes — reuses the single trace."""
+    if not hasattr(loop._train_window, "_cache_size"):
+        pytest.skip("jit cache introspection unavailable")
+    env = make("pendulum")
+    dcfg = ddpg.DDPGConfig(qat_enabled=False, batch_size=8)
+    cfg = loop.TrainConfig(n_envs=2, chunk=12, **_SMALL)
+    before = loop._train_window._cache_size()
+    _, hist = loop.train_device(env, cfg, dcfg,
+                                eval_fn=lambda *a: jnp.float32(0.0))
+    assert len(hist["step"]) == 2                 # two windows ran...
+    after = loop._train_window._cache_size()
+    assert after == before + 1                    # ...through one trace
+    loop.train_device(env, cfg, dcfg, eval_fn=lambda *a: jnp.float32(0.0))
+    loop.train_fused(env, cfg, dcfg, chunk=12,
+                     eval_fn=lambda *a: jnp.float32(0.0))
+    assert loop._train_window._cache_size() == after
+
+
+def test_train_device_matches_train_host_jnp():
+    """Host loop (eager env boundary) vs device loop (scanned window) run
+    the same act→explore→step→store→update program from the same seed.
+    The env steps eagerly on the host and inside the scanned launch on the
+    device, so XLA op fusion makes trajectories differ by ~1ulp; through
+    the Q15.16 weight projection that occasionally moves a parameter a few
+    lattice quanta (2^-16 ≈ 1.5e-5).  Anything beyond a handful of quanta
+    means the two drivers ran different programs."""
+    env = make("pendulum")
+    dcfg = ddpg.DDPGConfig(qat_enabled=False, batch_size=8)
+    cfg = loop.TrainConfig(n_envs=1, **_SMALL)
+    ts_h, _ = loop.train_host(env, cfg, dcfg)
+    ts_d, _ = loop.train_device(env, cfg, dcfg,
+                                eval_fn=lambda *a: jnp.float32(0.0))
+    assert int(ts_h.agent.step) == int(ts_d.agent.step) > 0
+    for name in ("actor", "critic", "actor_target", "critic_target"):
+        h, d = getattr(ts_h.agent, name), getattr(ts_d.agent, name)
+        jax.tree.map(lambda a, b: np.testing.assert_allclose(
+            np.asarray(a), np.asarray(b), rtol=0, atol=8 * 2.0 ** -16), h, d)
+    np.testing.assert_allclose(np.asarray(ts_h.obs), np.asarray(ts_d.obs),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(ts_h.buf.reward),
+                               np.asarray(ts_d.buf.reward),
+                               rtol=1e-4, atol=1e-5)
+    assert int(ts_h.buf.size) == int(ts_d.buf.size)
+
+
+def test_train_device_fleet_runs_and_reports():
+    """n_envs > 1: every step stores a whole fleet row-batch and performs
+    at most one update; history reports env-step and update throughput."""
+    env = make("pendulum")
+    dcfg = ddpg.DDPGConfig(qat_enabled=False, batch_size=8)
+    cfg = loop.TrainConfig(n_envs=4, **_SMALL)
+    ts, hist = loop.train_device(env, cfg, dcfg,
+                                 eval_fn=lambda *a: jnp.float32(0.0))
+    assert ts.obs.shape == (4, env.spec.obs_dim)
+    # 24 steps x 4 lanes = 96 transitions through a 64-slot ring
+    assert int(ts.buf.size) == 64
+    # updates start once buf.size >= warmup: 4 lanes/step fills the 8-slot
+    # warmup after step 1, so steps 1..23 each apply one update
+    assert int(ts.agent.step) == 23
+    assert set(hist) == {"step", "eval_reward", "train_reward", "ips",
+                         "updates_per_s"}
+    assert all(v > 0 for v in hist["ips"])
+    assert all(np.isfinite(v) for v in hist["train_reward"])
+
+
 def test_train_host_streams_updates_through_learner():
     env = make("pendulum")
     cfg = loop.LoopConfig(total_steps=6, warmup_steps=2,

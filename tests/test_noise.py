@@ -1,0 +1,131 @@
+"""rl/noise — pure key-threaded processes + deprecation-shim parity.
+
+The redesign replaced the free functions (`ou_init`/`ou_step`/`gaussian`)
+with a frozen `NoiseProcess` config + explicit `NoiseState` carry.  These
+tests pin (a) bit-exact old-vs-new parity through the shims, (b) the
+vmap/scan composability the device-resident loop relies on, and (c) the
+per-kind carry semantics (gaussian/none are stateless, OU advances).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.rl import noise
+
+
+# --------------------------------------------------------------------- #
+# old-vs-new parity through the deprecation shims
+# --------------------------------------------------------------------- #
+
+def test_ou_shims_match_noiseprocess_bitwise():
+    proc = noise.NoiseProcess(kind="ou", sigma=0.2, theta=0.15, dt=1e-2)
+    st_new = proc.init((3,))
+    with pytest.warns(DeprecationWarning):
+        st_old = noise.ou_init((3,))
+    assert np.array_equal(np.asarray(st_old.x), np.asarray(st_new.x))
+    key = jax.random.key(0)
+    for i in range(5):
+        k = jax.random.fold_in(key, i)
+        st_new, eps_new = proc.sample(st_new, k)
+        with pytest.warns(DeprecationWarning):
+            st_old, eps_old = noise.ou_step(st_old, k, sigma=0.2)
+        assert np.array_equal(np.asarray(eps_old), np.asarray(eps_new)), i
+        assert np.array_equal(np.asarray(st_old.x), np.asarray(st_new.x)), i
+
+
+def test_gaussian_shim_matches_noiseprocess_bitwise():
+    proc = noise.NoiseProcess(kind="gaussian", sigma=0.3)
+    key = jax.random.key(7)
+    st = proc.init((4, 2))
+    st2, eps_new = proc.sample(st, key)
+    with pytest.warns(DeprecationWarning):
+        eps_old = noise.gaussian(key, (4, 2), sigma=0.3)
+    assert np.array_equal(np.asarray(eps_old), np.asarray(eps_new))
+    # gaussian draw == sigma * normal(key): the exact pre-redesign math,
+    # which is also what ddpg.act(noise_key=...) draws internally
+    ref = 0.3 * jax.random.normal(key, (4, 2))
+    assert np.array_equal(np.asarray(eps_new), np.asarray(ref))
+    # stateless kinds return the carry untouched (same object semantics
+    # aren't required, but the value must not move)
+    assert np.array_equal(np.asarray(st2.x), np.asarray(st.x))
+
+
+def test_ou_state_alias():
+    assert noise.OUState is noise.NoiseState
+
+
+# --------------------------------------------------------------------- #
+# per-kind semantics
+# --------------------------------------------------------------------- #
+
+def test_none_kind_is_silent():
+    proc = noise.NoiseProcess(kind="none")
+    st = proc.init((2, 3))
+    st, eps = proc.sample(st, jax.random.key(0))
+    assert np.array_equal(np.asarray(eps), np.zeros((2, 3), np.float32))
+
+
+def test_ou_carry_advances_and_mean_reverts():
+    proc = noise.NoiseProcess(kind="ou", sigma=0.2)
+    st = proc.init((1,))
+    xs = []
+    for i in range(200):
+        st, eps = proc.sample(st, jax.random.fold_in(jax.random.key(1), i))
+        assert np.array_equal(np.asarray(eps), np.asarray(st.x))
+        xs.append(float(eps[0]))
+    # OU stays bounded around 0 (mean reversion), unlike a random walk
+    assert abs(np.mean(xs[100:])) < 1.0
+    assert np.std(xs[100:]) > 0.0
+
+
+def test_unknown_kind_rejected():
+    with pytest.raises(ValueError, match="unknown noise kind"):
+        noise.NoiseProcess(kind="uniform")
+
+
+def test_noiseprocess_is_hashable_static_config():
+    # frozen dataclass: usable as a jit-static argument like EnvSpec/DDPGConfig
+    assert hash(noise.NoiseProcess()) == hash(noise.NoiseProcess())
+    assert dataclasses.replace(noise.NoiseProcess(), sigma=0.5).sigma == 0.5
+
+
+# --------------------------------------------------------------------- #
+# vmap/scan composability — what the scanned device loop does with it
+# --------------------------------------------------------------------- #
+
+def test_sample_composes_with_scan_and_jit():
+    proc = noise.NoiseProcess(kind="ou", sigma=0.2)
+
+    @jax.jit
+    def rollout(st, keys):
+        return jax.lax.scan(proc.sample, st, keys)
+
+    keys = jax.random.split(jax.random.key(3), 10)
+    st, eps = rollout(proc.init((4,)), keys)
+    assert eps.shape == (10, 4)
+    # scan result == python loop of the jitted step, bit for bit (the
+    # same compiled step body; an *eager* loop can differ by ~1ulp from
+    # XLA's fused arithmetic, which is why the reference is jitted too)
+    step = jax.jit(proc.sample)
+    st2 = proc.init((4,))
+    for i, k in enumerate(keys):
+        st2, e = step(st2, k)
+        assert np.array_equal(np.asarray(e), np.asarray(eps[i])), i
+    assert np.array_equal(np.asarray(st.x), np.asarray(st2.x))
+
+
+def test_sample_vmaps_over_batched_carry():
+    proc = noise.NoiseProcess(kind="ou", sigma=0.2)
+    n = 5
+    keys = jax.random.split(jax.random.key(9), n)
+    st_fleet = proc.init((n, 2))
+    # vmap over (carry lane, key): the fleet layout train_device carries
+    st_v, eps_v = jax.vmap(proc.sample)(
+        noise.NoiseState(x=st_fleet.x), keys)
+    for i in range(n):
+        st_i, eps_i = proc.sample(proc.init((2,)), keys[i])
+        assert np.array_equal(np.asarray(eps_v[i]), np.asarray(eps_i)), i
+        assert np.array_equal(np.asarray(st_v.x[i]), np.asarray(st_i.x)), i

@@ -133,3 +133,28 @@ def test_overflow_batch_exact_multiple_of_capacity():
     assert int(buf.ptr) == 0 and int(buf.size) == cap
     np.testing.assert_array_equal(np.asarray(buf.obs).ravel(),
                                   [3.0, 4.0, 5.0])
+
+
+def test_add_batch_matches_add_bitwise():
+    """`add_batch` is `add` in the dict transition layout `sample` returns
+    and the scanned device loop stores through — same ring, bit for bit."""
+    rng = np.random.default_rng(0)
+    batch = {
+        "obs": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32),
+        "action": jnp.asarray(rng.standard_normal((5, 2)), jnp.float32),
+        "reward": jnp.asarray(rng.standard_normal((5,)), jnp.float32),
+        "next_obs": jnp.asarray(rng.standard_normal((5, 3)), jnp.float32),
+        "done": jnp.asarray(rng.integers(0, 2, (5,)), bool),
+    }
+    b1 = replay.add_batch(replay.init(8, 3, 2), batch)
+    b2 = replay.add(replay.init(8, 3, 2), batch["obs"], batch["action"],
+                    batch["reward"], batch["next_obs"], batch["done"])
+    for f in ("obs", "action", "reward", "next_obs", "done", "ptr", "size"):
+        np.testing.assert_array_equal(np.asarray(getattr(b1, f)),
+                                      np.asarray(getattr(b2, f)), f)
+    # round-trips under jit/scan: store what sample returns
+    def body(buf, key):
+        return replay.add_batch(buf, replay.sample(buf, key, 4)), None
+    out, _ = jax.jit(lambda b, ks: jax.lax.scan(body, b, ks))(
+        b1, jax.random.split(jax.random.key(1), 6))
+    assert int(out.size) == 8 and int(out.ptr) == (5 + 6 * 4) % 8
