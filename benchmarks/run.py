@@ -19,13 +19,13 @@ def main(argv=None) -> None:
     ap.add_argument("--quick", action="store_true",
                     help="reduced step counts (CI-scale)")
     ap.add_argument("--smoke", action="store_true",
-                    help="CI schema gate: only kernel+serve+learner+loop "
+                    help="CI schema gate: only kernel+serve+learner+loop+lm "
                          "benches at tiny dims/batches (interpret mode on "
                          "CPU); emits the same BENCH_*.json shapes for "
                          "benchmarks/schema.py")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: fig7,fig8,fig9,fig10,"
-                         "tableii,kernel,serve,learner,loop")
+                         "tableii,kernel,serve,learner,loop,lm")
     args = ap.parse_args(argv)
     if args.smoke and (args.only or args.quick):
         ap.error("--smoke fixes its own bench set/scale; drop --only/--quick")
@@ -36,16 +36,17 @@ def main(argv=None) -> None:
 
     from benchmarks import (fig7_accuracy, fig8_throughput, fig9_breakdown,
                             fig10_accelerator, kernel_bench, learner_bench,
-                            loop_bench, serve_bench, tableii_compare)
+                            lm_bench, loop_bench, serve_bench, tableii_compare)
 
     if args.smoke:
         # calibration order: kernel FIRST — both dispatchers (serve's
         # act-phase, learner's train-phase) calibrate from the fresh
-        # BENCH_fused_mlp.json
+        # BENCH_fused_mlp.json; lm last (no calibration dependency)
         kernel_bench.main(["--smoke"])
         serve_bench.main(["--smoke"])
         learner_bench.main(["--smoke"])
         loop_bench.main(["--smoke"])
+        lm_bench.main(["--smoke"])
         return
 
     if want("kernel"):
@@ -60,6 +61,8 @@ def main(argv=None) -> None:
         learner_bench.main(["--quick"] if args.quick else [])
     if want("loop"):
         loop_bench.main(["--quick"] if args.quick else [])
+    if want("lm"):
+        lm_bench.main(["--quick"] if args.quick else [])
     if want("fig8"):
         fig8_throughput.main(["--steps", "400" if args.quick else "2000"])
     if want("fig9"):

@@ -1,12 +1,13 @@
 """JSON schemas for the tracked benchmark artifacts.
 
 `BENCH_fused_mlp.json`, `BENCH_serve_policy.json`, `BENCH_learner.json`,
-and `BENCH_device_loop.json` are consumed programmatically —
-`CostModel.from_bench` calibrates both the serving (act-phase) and learner
-(train-phase) dispatchers from the kernel bench, and the CI bench job diffs
-the serving/training/loop numbers across PRs — so format drift must fail
-the build instead of silently degrading the cost model to its defaults.
-This module is the single source of truth for all four shapes:
+`BENCH_device_loop.json`, and `BENCH_serve_lm.json` are consumed
+programmatically — `CostModel.from_bench` calibrates both the serving
+(act-phase) and learner (train-phase) dispatchers from the kernel bench,
+and the CI bench job diffs the serving/training/loop/LM numbers across PRs
+— so format drift must fail the build instead of silently degrading the
+cost model to its defaults.  This module is the single source of truth for
+all five shapes:
 
     python -m benchmarks.schema --check BENCH_fused_mlp.json \
         BENCH_serve_policy.json BENCH_learner.json BENCH_device_loop.json
@@ -315,11 +316,67 @@ DEVICE_LOOP_SCHEMA = {
     },
 }
 
+# the continuously-batched LM serving bench: tokens/s, time-to-first-token
+# percentiles, decode-batch occupancy for the lane scheduler, against a
+# single-lane sequential baseline on the same compiled functions
+SERVE_LM_SCHEMA = {
+    "$schema": "http://json-schema.org/draft-07/schema#",
+    "type": "object",
+    "required": ["schema", "config", "engine", "sequential",
+                 "speedup_vs_sequential"],
+    "properties": {
+        "schema": {"const": "fixar/serve_lm_bench/v1"},
+        "config": {
+            "type": "object",
+            "required": ["arch", "lanes", "max_seq", "max_new", "requests",
+                         "prompt_lens"],
+            "properties": {
+                "arch": _STR,
+                "lanes": {"type": "integer"},
+                "max_seq": {"type": "integer"},
+                "max_new": {"type": "integer"},
+                "requests": {"type": "integer"},
+                "prompt_lens": {"type": "array",
+                                "items": {"type": "integer"}, "minItems": 2},
+                "smoke": {"type": "boolean"},
+            },
+        },
+        "engine": {
+            "type": "object",
+            "required": ["requests", "tokens", "decode_steps",
+                         "tokens_per_s_wall", "ttft_p50_ms", "ttft_p99_ms",
+                         "p50_ms", "p99_ms", "decode_occupancy", "lanes",
+                         "mode_histogram"],
+            "properties": {
+                "requests": {"type": "integer"},
+                "tokens": {"type": "integer"},
+                "decode_steps": {"type": "integer"},
+                "lanes": {"type": "integer"},
+                "mode_histogram": {    # per-phase: {"lm": {mode: n}}
+                    "type": "object",
+                    "required": ["lm"],
+                    "additionalProperties": {
+                        "type": "object",
+                        "additionalProperties": {"type": "integer"},
+                    },
+                },
+            },
+        },
+        "sequential": {
+            "type": "object",
+            "required": ["tokens", "tokens_per_s_wall"],
+            "additionalProperties": _NUM,
+        },
+        "speedup_vs_sequential": _NUM,
+    },
+}
+
 SCHEMAS_BY_TAG = {
     "fixar/fused_mlp_bench/v4": FUSED_MLP_SCHEMA,
     "fixar/serve_policy_bench/v3": SERVE_POLICY_SCHEMA,
     "fixar/learner_bench/v2": LEARNER_SCHEMA,
     "fixar/device_loop_bench/v1": DEVICE_LOOP_SCHEMA,
+    "fixar/serve_lm_bench/v1": SERVE_LM_SCHEMA,
 }
 
 

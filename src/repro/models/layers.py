@@ -356,7 +356,9 @@ def attn_decode(x: Array, p: Params, cfg: ModelConfig, *, local: bool,
                 ) -> tuple[Array, dict[str, Array]]:
     """One-token decode against a KV cache.
 
-    x: (B, 1, d); cache: {"k","v"}: (B, T, Hk, hd); pos: () current index.
+    x: (B, 1, d); cache: {"k","v"}: (B, T, Hk, hd); pos: () current index,
+    or (B,) per-row indices — the continuous-batching case (serve/lm),
+    where every cache lane decodes at its own position.
 
     Local layers use a RING cache of length `window` (§Perf-3): slot j
     holds position p_j = pos − ((pos − j) mod w), which is always inside
@@ -365,29 +367,40 @@ def attn_decode(x: Array, p: Params, cfg: ModelConfig, *, local: bool,
     (the long_500k storage win for gemma3/recurrentgemma).
     """
     q, k_new, v_new = _qkv(x, p, cfg, qat)
-    positions = jnp.full((x.shape[0], 1), pos, jnp.int32)
+    pos = jnp.asarray(pos, jnp.int32)
+    per_row = pos.ndim == 1
+    positions = pos[:, None] if per_row else jnp.full((x.shape[0], 1), pos, jnp.int32)
     q = rope(q, positions, cfg.rope_theta)
     k_new = rope(k_new, positions, cfg.rope_theta)
 
     t = cache["k"].shape[1]
     ring = local and t <= cfg.window
     slot = (pos % t).astype(jnp.int32) if ring else pos
-    k_cache = jax.lax.dynamic_update_slice(
-        cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
-    v_cache = jax.lax.dynamic_update_slice(
-        cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
+    if per_row:
+        # per-row scatter: lane b writes its own slot (vectorized .at[]
+        # instead of dynamic_update_slice, which needs one shared index)
+        rows = jnp.arange(x.shape[0])
+        k_cache = cache["k"].at[rows, slot].set(k_new[:, 0].astype(cache["k"].dtype))
+        v_cache = cache["v"].at[rows, slot].set(v_new[:, 0].astype(cache["v"].dtype))
+    else:
+        k_cache = jax.lax.dynamic_update_slice(
+            cache["k"], k_new.astype(cache["k"].dtype), (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            cache["v"], v_new.astype(cache["v"].dtype), (0, slot, 0, 0))
     k_cache = constrain(k_cache, rules, "batch", "kv_seq", "kv_heads", "head_dim")
     v_cache = constrain(v_cache, rules, "batch", "kv_seq", "kv_heads", "head_dim")
 
     j = jnp.arange(t, dtype=jnp.int32)
+    kpos = pos[:, None] if per_row else pos    # (B, 1) against j's (T,)
     if ring:
-        slot_pos = pos - (pos - j) % t     # position stored in slot j
+        slot_pos = kpos - (kpos - j) % t   # position stored in slot j
         valid = slot_pos >= 0              # slot filled yet?
     else:
-        valid = j <= pos
+        valid = j <= kpos
         if local:
-            valid = jnp.logical_and(valid, j > pos - cfg.window)
-    mask = valid[None, None, :]  # (1, Sq=1, Sk)
+            valid = jnp.logical_and(valid, j > kpos - cfg.window)
+    # (B, Sq=1, Sk) when per-row, (1, Sq=1, Sk) broadcast otherwise
+    mask = valid[:, None, :] if per_row else valid[None, None, :]
 
     out = _sdpa(q, k_cache, v_cache, mask, cfg, rules)
     out = qat.site("attn_o_in", out.reshape(x.shape[0], 1, -1))

@@ -473,7 +473,10 @@ def decode_step(params: Params, tokens: Array, cache: Params, pos: Array,
                 ranges: Optional[Params] = None,
                 quant_phase: Optional[Array] = None, unroll: bool = False
                 ) -> tuple[Array, Params]:
-    """One-token decode. tokens: (B, 1); pos: () int32 current position."""
+    """One-token decode. tokens: (B, 1); pos: () int32 current position, or
+    (B,) per-row positions for continuously-batched decode (serve/lm) —
+    attention layers scatter/mask per lane; recurrent blocks are
+    position-independent either way."""
     qat_on = ranges is not None
     x = L.embed_tokens(tokens, params["embed"], cfg, rules)
     m = len(cfg.block_pattern)

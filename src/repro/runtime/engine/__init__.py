@@ -1,0 +1,38 @@
+"""repro.runtime.engine — the shared streaming-engine runtime.
+
+One request lifecycle, three clients.  `serve/policy` (batched act
+requests), `train/learner` (batched update requests), and `serve/lm`
+(continuously-batched LM decode) all used to re-derive the same machinery:
+a thread-safe future, a FIFO queue with deadline-or-full coalescing, an
+adaptive dispatch hook, `EngineMetrics`/tracing/audit wiring, and a serve
+thread with deterministic close-before-drain shutdown.  This package is
+the single implementation; the engines keep only their domain logic
+(device calls, padding policy, lane scheduling) and their public stat
+key names.
+
+Layout
+------
+  queue.py — `RequestFuture`, `PendingRequest`, `BatcherConfig`,
+             `CoalescingQueue` (deadline-or-full `next_batch` for
+             micro-batching engines, immediate `pop` for continuous
+             batching)
+  base.py  — `StreamEngine`: observability wiring, dispatch hook,
+             start/stop/close lifecycle, and the serve loop with its
+             overridable `_tick`/`_process` hooks
+"""
+
+from repro.runtime.engine.base import StreamEngine
+from repro.runtime.engine.queue import (
+    BatcherConfig,
+    CoalescingQueue,
+    PendingRequest,
+    RequestFuture,
+)
+
+__all__ = [
+    "BatcherConfig",
+    "CoalescingQueue",
+    "PendingRequest",
+    "RequestFuture",
+    "StreamEngine",
+]

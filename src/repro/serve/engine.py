@@ -21,7 +21,9 @@ Params = dict[str, Any]
 
 def make_serve_step(cfg: ModelConfig, *, rules: Optional[ShardingRules] = None,
                     unroll: bool = False):
-    """decode one token: (params, tokens(B,1), cache, pos) -> (logits, cache)."""
+    """decode one token: (params, tokens(B,1), cache, pos) -> (logits, cache).
+    `pos` may be a () scalar (lockstep batch) or (B,) per-row positions
+    (continuous batching — serve/lm decodes heterogeneous lanes in one call)."""
 
     def serve_step(params, tokens, cache, pos):
         logits, new_cache = T.decode_step(params, tokens, cache, pos, cfg,

@@ -1,0 +1,13 @@
+"""repro.serve.lm — continuously-batched LM serving on the shared runtime.
+
+The third client of `repro.runtime.engine` (after `serve/policy` and
+`train/learner`), closing ROADMAP open item 4: the LM path used to serve
+one request at a time through `serve/engine.generate`; `LMEngine` decodes
+many sequences per device call with per-sequence KV slot allocation,
+mid-decode admission, and eviction of finished sequences — across the
+whole `configs/` arch zoo (transformer, recurrentgemma, rwkv6).
+"""
+
+from repro.serve.lm.engine import LMEngine, LMRequest
+
+__all__ = ["LMEngine", "LMRequest"]

@@ -14,6 +14,11 @@ Request lifecycle::
                                         ▼
                     futures resolve ◀── scatter rows back to requests
 
+The queue, serve thread, dispatch hook, and observability wiring are the
+shared `repro.runtime.engine.StreamEngine`; this module keeps only the
+policy-specific parts: the actor device call, bucket padding, mesh
+sharding, and the QAT saturation probe.
+
 The engine is frozen-QAT by construction: it holds only the actor params
 and a `core.qat.FrozenQuant` snapshot — there is no `QATState` anywhere on
 the serve path, so no range-monitor write can happen (QuaRL/QForce-RL's
@@ -30,10 +35,10 @@ Chrome trace events; and `record_qat_telemetry` (or the
 `qat_probe_every` cadence) probes per-site activation saturation against
 the frozen quantization ranges.
 """
+
 from __future__ import annotations
 
 import functools
-import threading
 import time
 from typing import Any, Optional, Sequence
 
@@ -42,9 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from repro.obs import (DispatchAudit, EngineMetrics, Observability,
-                       QATTelemetry)
+from repro.obs import Observability
 from repro.rl import ddpg
+from repro.runtime.engine import StreamEngine
 from repro.serve.policy.batcher import BatcherConfig, MicroBatcher, PolicyFuture
 from repro.serve.policy.dispatch import MODES, CostModel
 
@@ -52,7 +57,7 @@ Array = jax.Array
 Params = dict[str, Any]
 
 
-class PolicyEngine:
+class PolicyEngine(StreamEngine):
     """Drains concurrent act requests into batched device calls.
 
     Synchronous use: `run_batch(obs)` — one padded, dispatched device call.
@@ -60,53 +65,52 @@ class PolicyEngine:
     client threads; `stop()` to drain and join.
     """
 
-    def __init__(self, actor: Params,
-                 frozen=None, *,
-                 cost_model: Optional[CostModel] = None,
-                 batcher: BatcherConfig = BatcherConfig(),
-                 modes: Sequence[str] = MODES,
-                 force_mode: Optional[str] = None,
-                 mesh=None,
-                 obs: Optional[Observability] = None):
+    not_running_msg = (
+        "engine not serving; call start() first (or use run_batch for synchronous batches)"
+    )
+    already_started_msg = "engine already started"
+    stopped_msg = "policy engine stopped before serving this request"
+    health_running_key = "serving"
+    thread_name = "policy-serve"
+
+    def __init__(
+        self,
+        actor: Params,
+        frozen=None,
+        *,
+        cost_model: Optional[CostModel] = None,
+        batcher: BatcherConfig = BatcherConfig(),
+        modes: Sequence[str] = MODES,
+        force_mode: Optional[str] = None,
+        mesh=None,
+        obs: Optional[Observability] = None,
+    ):
         self.actor = actor
         self.frozen = frozen
-        self.cost_model = cost_model or CostModel.default()
         self.batcher_config = batcher
-        self.modes = tuple(modes)
-        self.force_mode = force_mode
-        if force_mode is not None and force_mode not in self.modes:
-            raise ValueError(f"force_mode {force_mode!r} not in enabled "
-                             f"modes {self.modes}")
         self.mesh = mesh
-        self._sharding = (NamedSharding(mesh, P("data"))
-                          if mesh is not None else None)
+        self._sharding = NamedSharding(mesh, P("data")) if mesh is not None else None
         n = len(ddpg.ACTOR_ACTS)
-        self.dims = [int(actor["l0"]["w"].shape[0])] + \
-                    [int(actor[f"l{i}"]["w"].shape[1]) for i in range(n)]
-        self._fns = {mode: jax.jit(functools.partial(ddpg.act_batch,
-                                                     mode=mode))
-                     for mode in self.modes}
-        # ---- observability: every stat lives in the shared registry
-        # (stats() is a view over it); the audit checks the cost model's
-        # predictions against measured wall time; the tracer is a no-op
-        # unless the caller passed an enabled one
-        self.obs = obs if obs is not None else Observability()
-        self._metrics = EngineMetrics(self.obs.registry, prefix="serve",
-                                      phase="act", items_name="actions",
-                                      calls_name="batches")
-        self._audit = DispatchAudit(self.cost_model, self.dims,
-                                    threshold=self.obs.audit_threshold,
-                                    registry=self.obs.registry,
-                                    prefix="serve.dispatch_audit")
-        self._qat = QATTelemetry(self.obs.registry, prefix="serve.qat")
+        dims = [int(actor["l0"]["w"].shape[0])]
+        dims += [int(actor[f"l{i}"]["w"].shape[1]) for i in range(n)]
+        self._fns = {}
+        for mode in modes:
+            self._fns[mode] = jax.jit(functools.partial(ddpg.act_batch, mode=mode))
         self._qat_probe_fn = None
         self._qat_ranges_recorded = False
-        self._batcher = MicroBatcher(batcher, registry=self.obs.registry,
-                                     prefix="serve.batcher")
-        self._thread: Optional[threading.Thread] = None
-        self._stop = threading.Event()
-        self.obs.register_health("serve", self.health)
-        self.obs.ensure_server()
+        obs = obs if obs is not None else Observability()
+        super().__init__(
+            prefix="serve",
+            phase="act",
+            items_name="actions",
+            calls_name="batches",
+            queue=MicroBatcher(batcher, registry=obs.registry, prefix="serve.batcher"),
+            modes=modes,
+            dims=dims,
+            cost_model=cost_model or CostModel.default(),
+            force_mode=force_mode,
+            obs=obs,
+        )
 
     @classmethod
     def from_ddpg(cls, state: "ddpg.DDPGState", **kwargs) -> "PolicyEngine":
@@ -118,20 +122,15 @@ class PolicyEngine:
     # dispatch + device call
     # ------------------------------------------------------------------ #
 
-    def choose_mode(self, bucket: int) -> str:
-        if self.force_mode is not None:
-            return self.force_mode
-        return self.cost_model.choose(bucket, self.dims, self.modes)
-
-    def warmup(self, buckets: Optional[Sequence[int]] = None,
-               modes: Optional[Sequence[str]] = None) -> int:
+    def warmup(
+        self, buckets: Optional[Sequence[int]] = None, modes: Optional[Sequence[str]] = None
+    ) -> int:
         """Lower + compile the (bucket, mode) executables ahead of traffic.
         Returns the number of executables warmed."""
         n = 0
         dummy = np.zeros((1, self.dims[0]), np.float32)
         for bucket in buckets or self.batcher_config.buckets:
-            for mode in modes or ([self.force_mode] if self.force_mode
-                                  else self.modes):
+            for mode in modes or ([self.force_mode] if self.force_mode else self.modes):
                 x = np.broadcast_to(dummy, (bucket, self.dims[0]))
                 self._call(np.ascontiguousarray(x), mode)
                 n += 1
@@ -139,11 +138,9 @@ class PolicyEngine:
 
     def _call(self, x_padded: np.ndarray, mode: str) -> Array:
         if mode not in self._fns:
-            raise ValueError(f"mode {mode!r} not in enabled modes "
-                             f"{self.modes}")
+            raise ValueError(f"mode {mode!r} not in enabled modes {self.modes}")
         x = jnp.asarray(x_padded)
-        if self._sharding is not None \
-                and x.shape[0] % self.mesh.size == 0:
+        if self._sharding is not None and x.shape[0] % self.mesh.size == 0:
             x = jax.device_put(x, self._sharding)
         return self._fns[mode](self.actor, x, self.frozen)
 
@@ -155,8 +152,7 @@ class PolicyEngine:
         n = obs.shape[0]
         cap = self.batcher_config.max_batch
         if n > cap:
-            return np.concatenate([self.run_batch(obs[i:i + cap])
-                                   for i in range(0, n, cap)])
+            return np.concatenate([self.run_batch(obs[i : i + cap]) for i in range(0, n, cap)])
         tracer = self.obs.tracer
         bucket = self.batcher_config.bucket_for(n)
         with tracer.span("serve.dispatch", bucket=bucket, rows=n) as sp:
@@ -167,14 +163,9 @@ class PolicyEngine:
         t0 = time.perf_counter()
         with tracer.span("serve.launch", bucket=bucket, mode=mode):
             y = self._call(x, mode)
-        with tracer.span("serve.block_until_ready", bucket=bucket,
-                         mode=mode):
+        with tracer.span("serve.block_until_ready", bucket=bucket, mode=mode):
             y = jax.block_until_ready(y)
-        device_s = time.perf_counter() - t0
-        self._audit.record("act", mode, bucket, device_s)
-        self._metrics.record_call(n, bucket, mode, device_s)
-        every = self.obs.qat_probe_every
-        if every and self._metrics.calls % every == 0:
+        if self._finish_call(n, bucket, mode, time.perf_counter() - t0):
             self.record_qat_telemetry(x, rows=n)
         return np.asarray(y[:n])
 
@@ -186,98 +177,11 @@ class PolicyEngine:
         """Enqueue one observation (obs_dim,); resolve via .result().
         Raises RuntimeError once the engine is stopped (never leaves a
         future dangling in a queue nothing drains)."""
-        if self._thread is None:
-            raise RuntimeError(
-                "engine not serving; call start() first (or use run_batch "
-                "for synchronous batches)")
-        self._metrics.mark_submit()
+        self._require_running()
         return self._batcher.submit(obs)
 
-    def start(self) -> "PolicyEngine":
-        if self._thread is not None:
-            raise RuntimeError("engine already started")
-        self._stop.clear()
-        self._batcher.reopen()
-        self._thread = threading.Thread(target=self._serve_loop,
-                                        name="policy-serve", daemon=True)
-        self._thread.start()
-        return self
-
-    def stop(self) -> None:
-        """Stop accepting requests, serve what's queued, join the loop.
-
-        Close-before-drain: sustained client traffic cannot livelock the
-        shutdown, and any request that raced past the close is failed
-        loudly, never left unresolved."""
-        if self._thread is None:
-            return
-        self._batcher.close()               # no new submits from here on
-        while len(self._batcher):           # let queued work finish
-            time.sleep(0.005)
-        self._stop.set()
-        self._thread.join()
-        self._thread = None
-        for r in self._batcher.drain():     # safety net; normally empty
-            r.future.set_exception(
-                RuntimeError("policy engine stopped before serving this "
-                             "request"))
-
-    def close(self) -> None:
-        """Shut the engine down for good: stop the serve loop and flush
-        the tracer (to its configured path, if any) so a run that died
-        mid-serve still leaves its trace on disk.  The observability
-        bundle itself (HTTP server) stays up — it may be shared with
-        other engines; `Observability.close()` owns that."""
-        self.stop()
-        self.obs.flush()
-
-    def __enter__(self) -> "PolicyEngine":
-        return self.start()
-
-    def __exit__(self, *exc) -> bool:
-        self.close()
-        return False
-
-    def health(self) -> dict:
-        """`/healthz` source: ok while the dispatch calibration holds.
-        Includes enough context (drift factor, serving state, lifetime
-        batches) for an operator to act on a 503 without shelling in."""
-        drift = self._audit.drift()
-        return {"ok": not drift["stale"],
-                "serving": self._thread is not None,
-                "drift_factor": drift["drift_factor"],
-                "drift_threshold": drift["threshold"],
-                "batches": self._metrics.calls}
-
-    def _serve_loop(self) -> None:
-        tracer = self.obs.tracer
-        while not self._stop.is_set():
-            t_poll = time.perf_counter() if tracer.enabled else 0.0
-            reqs = self._batcher.next_batch(timeout=0.02)
-            if not reqs:
-                continue
-            if tracer.enabled:
-                # only record the coalesce window when a batch actually
-                # drained — idle polls would otherwise spam the trace
-                tracer.complete("serve.coalesce", t_poll,
-                                time.perf_counter(), cat="batcher",
-                                requests=len(reqs))
-            try:
-                acts = self.run_batch(np.stack([r.obs for r in reqs]))
-            except BaseException as err:  # noqa: BLE001 — relay to callers
-                for r in reqs:
-                    r.future.set_exception(err)
-                continue
-            with tracer.span("serve.reply", requests=len(reqs)):
-                t_done = time.perf_counter()
-                for r, a in zip(reqs, acts):
-                    r.future.set_result(a)
-            if tracer.enabled:
-                for r in reqs:
-                    tracer.complete("serve.request", r.t_submit, t_done,
-                                    cat="request")
-            self._metrics.record_replies(
-                len(reqs), (t_done - r.t_submit for r in reqs), t_done)
+    def _process(self, reqs: list) -> list:
+        return list(self.run_batch(np.stack([r.obs for r in reqs])))
 
     # ------------------------------------------------------------------ #
     # telemetry
@@ -293,12 +197,11 @@ class PolicyEngine:
         bucket shape, which the engine's fixed bucket set bounds.  Returns
         the per-site `qat_telemetry` stats view.
         """
-        if not self._qat_ranges_recorded and self.frozen is not None \
-                and self.frozen.quantized:
+        if not self._qat_ranges_recorded and self.frozen is not None and self.frozen.quantized:
             for i in range(len(self.frozen.a_mins)):
-                self._qat.record_range(f"act{i}",
-                                       float(self.frozen.a_mins[i]),
-                                       float(self.frozen.a_maxs[i]))
+                self._qat.record_range(
+                    f"act{i}", float(self.frozen.a_mins[i]), float(self.frozen.a_maxs[i])
+                )
             self._qat_ranges_recorded = True
         if self._qat_probe_fn is None:
             self._qat_probe_fn = jax.jit(ddpg.actor_site_telemetry)
@@ -308,12 +211,16 @@ class PolicyEngine:
             mask = np.zeros((x.shape[0],), np.float32)
             mask[:rows] = 1.0
         mns, mxs, sats = jax.block_until_ready(
-            self._qat_probe_fn(self.actor, jnp.asarray(x), self.frozen,
-                               mask if mask is None else jnp.asarray(mask)))
+            self._qat_probe_fn(
+                self.actor,
+                jnp.asarray(x),
+                self.frozen,
+                mask if mask is None else jnp.asarray(mask),
+            )
+        )
         mns, mxs, sats = np.asarray(mns), np.asarray(mxs), np.asarray(sats)
         for i in range(mns.shape[0]):
-            self._qat.record_probe(f"act{i}", float(mns[i]), float(mxs[i]),
-                                   float(sats[i]))
+            self._qat.record_probe(f"act{i}", float(mns[i]), float(mxs[i]), float(sats[i]))
         return self._qat.stats()
 
     # ------------------------------------------------------------------ #
@@ -341,11 +248,6 @@ class PolicyEngine:
             "dispatch_audit": self._audit.snapshot(),
             "qat_telemetry": self._qat.stats(),
         }
-
-    def reset_stats(self) -> None:
-        self._metrics.reset()
-        self._audit.reset()
-        self._qat.reset()
 
 
 __all__ = ["PolicyEngine"]

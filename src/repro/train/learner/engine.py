@@ -4,6 +4,12 @@
 through it: coalesce → pad to bucket → train-phase adaptive dispatch →
 ONE `update_fn` call per micro-batch, applied sequentially.
 
+The queue, serve thread, dispatch hook, and observability wiring are the
+shared `repro.runtime.engine.StreamEngine`; this module keeps only the
+learner-specific parts: sequential state mutation under `_ulock`, the
+mask/exact pad policy, oversized-request chunking, and the live-QAT
+telemetry probe.
+
 Observability runs through `repro.obs` (pass an `Observability` bundle):
 the shared registry carries the training-throughput story end to end —
 updates/sec, trained-samples/sec (train IPS, the Fig. 8 headline axis),
@@ -14,6 +20,7 @@ the live `QATState` between updates (`benchmarks/learner_bench` lands it
 all in `BENCH_learner.json`).  An enabled tracer gets per-update spans
 (dispatch → launch → block_until_ready).
 """
+
 from __future__ import annotations
 
 import threading
@@ -25,20 +32,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.obs import (DispatchAudit, EngineMetrics, Observability,
-                       QATTelemetry)
+from repro.obs import Observability
 from repro.rl import ddpg
-from repro.serve.policy.batcher import BatcherConfig
+from repro.runtime.engine import BatcherConfig, StreamEngine
 from repro.serve.policy.dispatch import TRAIN_MODES, CostModel
-from repro.train.learner.batcher import (TRANSITION_KEYS, JoinedFuture,
-                                         UpdateBatcher, as_transition_batch,
-                                         concat_batches, merge_chunk_metrics)
+from repro.train.learner.batcher import (
+    TRANSITION_KEYS,
+    JoinedFuture,
+    UpdateBatcher,
+    as_transition_batch,
+    concat_batches,
+    merge_chunk_metrics,
+)
 
 # dispatch mode -> the ddpg backend that can actually train through it
 # (the per-layer chain has no autodiff rule, hence no "layer" entry);
 # fused_step is the 2-launch whole-update kernel (fwd+bwd+Adam+soft-update)
-TRAIN_BACKENDS = {"fused_step": "pallas_fused_step", "fused": "pallas",
-                  "jnp": "jnp"}
+TRAIN_BACKENDS = {"fused_step": "pallas_fused_step", "fused": "pallas", "jnp": "jnp"}
 
 # learner-shaped default buckets: update batches are replay-sized (tens to
 # hundreds of rows), never single observations
@@ -47,7 +57,7 @@ DEFAULT_BUCKETS = (8, 32, 128)
 UpdateFn = Callable[[Any, dict], tuple[Any, dict]]
 
 
-class LearnerEngine:
+class LearnerEngine(StreamEngine):
     """Streams batched updates through an adaptive train-phase dispatcher.
 
     Synchronous use: `run_update(batch)` — one (or, for oversized batches,
@@ -68,81 +78,96 @@ class LearnerEngine:
         families without a mask contract, e.g. the LM step).
     """
 
-    def __init__(self, state, update_fns: dict[str, UpdateFn], *,
-                 dims: Sequence[int],
-                 cost_model: Optional[CostModel] = None,
-                 batcher: Optional[BatcherConfig] = None,
-                 force_mode: Optional[str] = None,
-                 pad_policy: str = "mask",
-                 required_keys: Optional[Sequence[str]] = None,
-                 warmup_template: Optional[Callable[[int], dict]] = None,
-                 obs: Optional[Observability] = None):
+    not_running_msg = (
+        "learner not streaming; call start() first (or use run_update for synchronous updates)"
+    )
+    already_started_msg = "learner already started"
+    stopped_msg = "learner stopped before applying this update"
+    health_running_key = "training"
+    thread_name = "learner"
+
+    def __init__(
+        self,
+        state,
+        update_fns: dict[str, UpdateFn],
+        *,
+        dims: Sequence[int],
+        cost_model: Optional[CostModel] = None,
+        batcher: Optional[BatcherConfig] = None,
+        force_mode: Optional[str] = None,
+        pad_policy: str = "mask",
+        required_keys: Optional[Sequence[str]] = None,
+        warmup_template: Optional[Callable[[int], dict]] = None,
+        obs: Optional[Observability] = None,
+    ):
         self._state = state
         self._update_fns = dict(update_fns)
-        self.modes = tuple(self._update_fns)
-        self.dims = list(dims)
-        self.cost_model = cost_model or CostModel.default()
         self.batcher_config = batcher or BatcherConfig(buckets=DEFAULT_BUCKETS)
-        self.force_mode = force_mode
-        if force_mode is not None and force_mode not in self.modes:
-            raise ValueError(f"force_mode {force_mode!r} not in enabled "
-                             f"modes {self.modes}")
         if pad_policy not in ("mask", "exact"):
             raise ValueError(f"pad_policy {pad_policy!r}; 'mask' | 'exact'")
         self.pad_policy = pad_policy
         self.required_keys = required_keys
         self.warmup_template = warmup_template
-        # ---- observability: same subsystem as serve/policy — shared
-        # registry (stats() is a view over it), dispatch audit, tracer
-        self.obs = obs if obs is not None else Observability()
-        self._metrics = EngineMetrics(self.obs.registry, prefix="learner",
-                                      phase="train",
-                                      items_name="transitions",
-                                      calls_name="updates")
-        self._audit = DispatchAudit(self.cost_model, self.dims,
-                                    threshold=self.obs.audit_threshold,
-                                    registry=self.obs.registry,
-                                    prefix="learner.dispatch_audit")
-        self._qat = QATTelemetry(self.obs.registry, prefix="learner.qat")
-        self._batcher = UpdateBatcher(self.batcher_config,
-                                      required_keys=required_keys,
-                                      registry=self.obs.registry,
-                                      prefix="learner.batcher")
-        self._thread: Optional[threading.Thread] = None
-        self._stop = threading.Event()
         # one lock serializes state mutation (sync callers + drain thread):
         # updates are sequential by construction
         self._ulock = threading.Lock()
-        self.obs.register_health("learner", self.health)
-        self.obs.ensure_server()
+        obs = obs if obs is not None else Observability()
+        super().__init__(
+            prefix="learner",
+            phase="train",
+            items_name="transitions",
+            calls_name="updates",
+            queue=UpdateBatcher(
+                self.batcher_config,
+                required_keys=required_keys,
+                registry=obs.registry,
+                prefix="learner.batcher",
+            ),
+            modes=tuple(self._update_fns),
+            dims=dims,
+            cost_model=cost_model or CostModel.default(),
+            force_mode=force_mode,
+            obs=obs,
+        )
 
     @classmethod
-    def from_ddpg(cls, state: "ddpg.DDPGState", cfg: "ddpg.DDPGConfig",
-                  *, modes: Sequence[str] = TRAIN_MODES,
-                  **kwargs) -> "LearnerEngine":
+    def from_ddpg(
+        cls,
+        state: "ddpg.DDPGState",
+        cfg: "ddpg.DDPGConfig",
+        *,
+        modes: Sequence[str] = TRAIN_MODES,
+        **kwargs,
+    ) -> "LearnerEngine":
         """The DDPG learner: one jitted `ddpg.update` per trainable
         dispatch mode (executables per bucket come from the jit cache, so
         a bucket-sized stream and a direct call share the SAME program —
         that is what makes streamed results bit-identical)."""
         unknown = [m for m in modes if m not in TRAIN_BACKENDS]
         if unknown:
-            raise ValueError(f"modes {unknown} cannot train; trainable "
-                             f"dispatch modes: {sorted(TRAIN_BACKENDS)}")
+            raise ValueError(
+                f"modes {unknown} cannot train; trainable "
+                f"dispatch modes: {sorted(TRAIN_BACKENDS)}"
+            )
         import dataclasses
-        fns = {m: jax.jit(partial(
-                   ddpg.update,
-                   cfg=dataclasses.replace(cfg, backend=TRAIN_BACKENDS[m])))
-               for m in modes}
+
+        fns = {}
+        for m in modes:
+            mode_cfg = dataclasses.replace(cfg, backend=TRAIN_BACKENDS[m])
+            fns[m] = jax.jit(partial(ddpg.update, cfg=mode_cfg))
         n = len(ddpg.ACTOR_ACTS)
-        dims = [int(state.actor["l0"]["w"].shape[0])] + \
-               [int(state.actor[f"l{i}"]["w"].shape[1]) for i in range(n)]
+        dims = [int(state.actor["l0"]["w"].shape[0])] + [
+            int(state.actor[f"l{i}"]["w"].shape[1]) for i in range(n)
+        ]
 
         def transitions(rows: int) -> dict:
-            return {"obs": np.zeros((rows, dims[0]), np.float32),
-                    "action": np.zeros((rows, dims[-1]), np.float32),
-                    "reward": np.zeros((rows,), np.float32),
-                    "next_obs": np.zeros((rows, dims[0]), np.float32),
-                    "done": np.zeros((rows,), bool)}
+            return {
+                "obs": np.zeros((rows, dims[0]), np.float32),
+                "action": np.zeros((rows, dims[-1]), np.float32),
+                "reward": np.zeros((rows,), np.float32),
+                "next_obs": np.zeros((rows, dims[0]), np.float32),
+                "done": np.zeros((rows,), bool),
+            }
 
         kwargs.setdefault("required_keys", TRANSITION_KEYS)
         kwargs.setdefault("warmup_template", transitions)
@@ -166,14 +191,7 @@ class LearnerEngine:
     # dispatch + device call
     # ------------------------------------------------------------------ #
 
-    def choose_mode(self, bucket: int) -> str:
-        if self.force_mode is not None:
-            return self.force_mode
-        return self.cost_model.choose(bucket, self.dims, self.modes,
-                                      phase="train")
-
-    def _pad(self, batch: dict[str, np.ndarray], rows: int,
-             bucket: int) -> dict[str, np.ndarray]:
+    def _pad(self, batch: dict[str, np.ndarray], rows: int, bucket: int) -> dict[str, np.ndarray]:
         """Pad `rows` transitions up to `bucket` (zero rows + zero-weight
         mask).  Exact fits pass through untouched — no mask key, so the
         program is byte-for-byte the direct-call executable."""
@@ -182,18 +200,22 @@ class LearnerEngine:
         if self.pad_policy == "exact":
             raise ValueError(
                 f"pad_policy='exact': batch of {rows} rows must hit a "
-                f"bucket exactly ({self.batcher_config.buckets})")
+                f"bucket exactly ({self.batcher_config.buckets})"
+            )
         pad = bucket - rows
-        out = {k: np.concatenate(
-                   [v, np.zeros((pad,) + v.shape[1:], v.dtype)])
-               for k, v in batch.items()}
-        out["mask"] = np.concatenate(
-            [np.ones(rows, np.float32), np.zeros(pad, np.float32)])
+        out = {
+            k: np.concatenate([v, np.zeros((pad,) + v.shape[1:], v.dtype)])
+            for k, v in batch.items()
+        }
+        out["mask"] = np.concatenate([np.ones(rows, np.float32), np.zeros(pad, np.float32)])
         return out
 
-    def warmup(self, buckets: Optional[Sequence[int]] = None,
-               modes: Optional[Sequence[str]] = None,
-               padded: bool = False) -> int:
+    def warmup(
+        self,
+        buckets: Optional[Sequence[int]] = None,
+        modes: Optional[Sequence[str]] = None,
+        padded: bool = False,
+    ) -> int:
         """Lower + compile the (bucket, mode) update executables ahead of
         traffic without advancing the training state.  `padded=True` also
         warms the masked variants (bucket-1 rows).  Returns the number of
@@ -207,24 +229,20 @@ class LearnerEngine:
             raise RuntimeError(
                 "no warmup_template: this engine's update family has no "
                 "known batch shape — pass warmup_template=rows->batch at "
-                "construction (from_ddpg installs the DDPG one)")
+                "construction (from_ddpg installs the DDPG one)"
+            )
         n = 0
         for bucket in buckets or self.batcher_config.buckets:
-            rows_list = [bucket] + ([bucket - 1] if padded and bucket > 1
-                                    else [])
-            for mode in modes or ([self.force_mode] if self.force_mode
-                                  else self.modes):
+            rows_list = [bucket] + ([bucket - 1] if padded and bucket > 1 else [])
+            for mode in modes or ([self.force_mode] if self.force_mode else self.modes):
                 for rows in rows_list:
-                    batch = self._pad(self.warmup_template(rows), rows,
-                                      bucket)
+                    batch = self._pad(self.warmup_template(rows), rows, bucket)
                     with self._ulock:
-                        jax.block_until_ready(
-                            self._update_fns[mode](self._state, batch))
+                        jax.block_until_ready(self._update_fns[mode](self._state, batch))
                     n += 1
         return n
 
-    def _apply(self, batch: dict[str, np.ndarray], rows: int
-               ) -> dict[str, float]:
+    def _apply(self, batch: dict[str, np.ndarray], rows: int) -> dict[str, float]:
         """One micro-batch through the dispatcher and onto the state."""
         tracer = self.obs.tracer
         bucket = self.batcher_config.bucket_for(rows)
@@ -235,17 +253,12 @@ class LearnerEngine:
         with self._ulock:
             t0 = time.perf_counter()
             with tracer.span("learner.launch", bucket=bucket, mode=mode):
-                new_state, metrics = self._update_fns[mode](self._state,
-                                                            padded)
-            with tracer.span("learner.block_until_ready", bucket=bucket,
-                             mode=mode):
+                new_state, metrics = self._update_fns[mode](self._state, padded)
+            with tracer.span("learner.block_until_ready", bucket=bucket, mode=mode):
                 jax.block_until_ready((new_state, metrics))
             device_s = time.perf_counter() - t0
             self._state = new_state
-        self._audit.record("train", mode, bucket, device_s)
-        self._metrics.record_call(rows, bucket, mode, device_s)
-        every = self.obs.qat_probe_every
-        if every and self._metrics.calls % every == 0:
+        if self._finish_call(rows, bucket, mode, device_s):
             self.record_qat_telemetry(batch)
         out = {k: float(v) for k, v in metrics.items()}
         out["mode"] = mode
@@ -256,8 +269,7 @@ class LearnerEngine:
         — key-agnostic (the update family defines the batch schema)."""
         cap = self.batcher_config.max_batch
         for lo in range(0, rows, cap):
-            yield ({k: v[lo:lo + cap] for k, v in arrs.items()},
-                   min(cap, rows - lo))
+            yield ({k: v[lo : lo + cap] for k, v in arrs.items()}, min(cap, rows - lo))
 
     def run_update(self, batch) -> dict[str, float]:
         """Synchronously stream one update request: chunk to the top
@@ -266,8 +278,9 @@ class LearnerEngine:
         arrs, rows = as_transition_batch(batch, self.required_keys)
         if rows <= self.batcher_config.max_batch:
             return self._apply(arrs, rows)
-        return merge_chunk_metrics([(self._apply(part, n), n)
-                                    for part, n in self._chunks(arrs, rows)])
+        return merge_chunk_metrics(
+            [(self._apply(part, n), n) for part, n in self._chunks(arrs, rows)]
+        )
 
     # ------------------------------------------------------------------ #
     # threaded streaming
@@ -277,95 +290,19 @@ class LearnerEngine:
         """Enqueue one update request (replay batch or trajectory chunk);
         resolve via `.result()` to the update metrics.  Oversized requests
         split into top-bucket chunks behind one aggregate future."""
-        if self._thread is None:
-            raise RuntimeError(
-                "learner not streaming; call start() first (or use "
-                "run_update for synchronous updates)")
-        self._metrics.mark_submit()
+        self._require_running()
         arrs, rows = as_transition_batch(batch, self.required_keys)
         if rows <= self.batcher_config.max_batch:
             return self._batcher.submit(arrs)
-        return JoinedFuture([(self._batcher.submit(part), n)
-                             for part, n in self._chunks(arrs, rows)])
+        return JoinedFuture(
+            [(self._batcher.submit(part), n) for part, n in self._chunks(arrs, rows)]
+        )
 
-    def start(self) -> "LearnerEngine":
-        if self._thread is not None:
-            raise RuntimeError("learner already started")
-        self._stop.clear()
-        self._batcher.reopen()
-        self._thread = threading.Thread(target=self._serve_loop,
-                                        name="learner", daemon=True)
-        self._thread.start()
-        return self
-
-    def stop(self) -> None:
-        """Stop accepting requests, apply what's queued, join the loop
-        (close-before-drain, exactly the serve/policy shutdown shape)."""
-        if self._thread is None:
-            return
-        self._batcher.close()
-        while len(self._batcher):
-            time.sleep(0.005)
-        self._stop.set()
-        self._thread.join()
-        self._thread = None
-        for r in self._batcher.drain():
-            r.future.set_exception(
-                RuntimeError("learner stopped before applying this update"))
-
-    def close(self) -> None:
-        """Stop the drain loop and flush the tracer so an aborted training
-        run keeps its trace.  The observability bundle's HTTP server stays
-        up (it may be shared); `Observability.close()` owns that."""
-        self.stop()
-        self.obs.flush()
-
-    def __enter__(self) -> "LearnerEngine":
-        return self.start()
-
-    def __exit__(self, *exc) -> bool:
-        self.close()
-        return False
-
-    def health(self) -> dict:
-        """`/healthz` source: ok while the dispatch calibration holds."""
-        drift = self._audit.drift()
-        return {"ok": not drift["stale"],
-                "training": self._thread is not None,
-                "drift_factor": drift["drift_factor"],
-                "drift_threshold": drift["threshold"],
-                "updates": self._metrics.calls}
-
-    def _serve_loop(self) -> None:
-        tracer = self.obs.tracer
-        while not self._stop.is_set():
-            t_poll = time.perf_counter() if tracer.enabled else 0.0
-            reqs = self._batcher.next_batch(timeout=0.02)
-            if not reqs:
-                continue
-            if tracer.enabled:
-                tracer.complete("learner.coalesce", t_poll,
-                                time.perf_counter(), cat="batcher",
-                                requests=len(reqs))
-            try:
-                rows = sum(r.rows for r in reqs)
-                metrics = self._apply(
-                    concat_batches([r.batch for r in reqs]), rows)
-            except BaseException as err:  # noqa: BLE001 — relay to callers
-                for r in reqs:
-                    r.future.set_exception(err)
-                continue
-            with tracer.span("learner.reply", requests=len(reqs)):
-                t_done = time.perf_counter()
-                for r in reqs:
-                    # coalesced requests share one update: metrics are joint
-                    r.future.set_result(dict(metrics, rows=r.rows))
-            if tracer.enabled:
-                for r in reqs:
-                    tracer.complete("learner.request", r.t_submit, t_done,
-                                    cat="request")
-            self._metrics.record_replies(
-                len(reqs), (t_done - r.t_submit for r in reqs), t_done)
+    def _process(self, reqs: list) -> list:
+        rows = sum(r.rows for r in reqs)
+        metrics = self._apply(concat_batches([r.batch for r in reqs]), rows)
+        # coalesced requests share one update: metrics are joint
+        return [dict(metrics, rows=r.rows) for r in reqs]
 
     # ------------------------------------------------------------------ #
     # telemetry
@@ -388,13 +325,11 @@ class LearnerEngine:
             # retrace per shape) against the would-freeze-now quant params
             frozen = ddpg.freeze_actor_quant(self._state)
             mns, mxs, sats = ddpg.actor_site_telemetry(
-                self._state.actor, jnp.asarray(batch["obs"],
-                                               jnp.float32), frozen)
-            mns, mxs, sats = (np.asarray(mns), np.asarray(mxs),
-                              np.asarray(sats))
+                self._state.actor, jnp.asarray(batch["obs"], jnp.float32), frozen
+            )
+            mns, mxs, sats = (np.asarray(mns), np.asarray(mxs), np.asarray(sats))
             for i in range(mns.shape[0]):
-                self._qat.record_probe(f"act{i}", float(mns[i]),
-                                       float(mxs[i]), float(sats[i]))
+                self._qat.record_probe(f"act{i}", float(mns[i]), float(mxs[i]), float(sats[i]))
         return self._qat.stats()
 
     # ------------------------------------------------------------------ #
@@ -413,11 +348,9 @@ class LearnerEngine:
             "requests": m.requests,
             "updates": m.calls,
             "transitions": m.items,
-            "updates_per_s_device": (m.calls / device_s
-                                     if device_s > 0 else None),
+            "updates_per_s_device": (m.calls / device_s if device_s > 0 else None),
             "updates_per_s_wall": (m.calls / wall if wall else None),
-            "train_ips_device": (m.items / device_s
-                                 if device_s > 0 else None),
+            "train_ips_device": (m.items / device_s if device_s > 0 else None),
             "train_ips_wall": (m.items / wall if wall else None),
             "p50_ms": m.latency_ms(0.50),
             "p99_ms": m.latency_ms(0.99),
@@ -427,11 +360,6 @@ class LearnerEngine:
             "dispatch_audit": self._audit.snapshot(),
             "qat_telemetry": self._qat.stats(),
         }
-
-    def reset_stats(self) -> None:
-        self._metrics.reset()
-        self._audit.reset()
-        self._qat.reset()
 
 
 __all__ = ["LearnerEngine", "TRAIN_BACKENDS", "DEFAULT_BUCKETS"]

@@ -1,0 +1,123 @@
+"""Shared streaming-engine runtime: deprecation shims + de-duplication pins.
+
+Two things are pinned here:
+
+  * the historical `serve.policy.MicroBatcher` / `train.learner.
+    UpdateBatcher` import surfaces still work, and are THIN shims over
+    `repro.runtime.engine` (subclasses of the shared queue, shared
+    future type under the old name);
+  * the engines really are clients of the shared runtime — the queue /
+    thread-lifecycle / serve-loop machinery exists in exactly one place
+    (`StreamEngine`), not re-implemented per engine.
+"""
+import time
+
+import numpy as np
+import pytest
+
+from repro.runtime.engine import (BatcherConfig, CoalescingQueue,
+                                  PendingRequest, RequestFuture, StreamEngine)
+from repro.runtime.engine.queue import CoalescingQueue as QueueByPath
+from repro.serve.policy import MicroBatcher, PolicyEngine, PolicyFuture
+from repro.serve.policy.batcher import BatcherConfig as PolicyBatcherConfig
+from repro.serve.policy.batcher import PendingRequest as PolicyPendingRequest
+from repro.train.learner import LearnerEngine, UpdateBatcher
+from repro.train.learner.batcher import BatcherConfig as LearnerBatcherConfig
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: old import paths resolve to the shared runtime
+# ---------------------------------------------------------------------------
+
+
+def test_old_surfaces_are_shared_runtime_aliases():
+    assert PolicyFuture is RequestFuture
+    assert PolicyPendingRequest is PendingRequest
+    assert PolicyBatcherConfig is BatcherConfig
+    assert LearnerBatcherConfig is BatcherConfig
+    assert QueueByPath is CoalescingQueue
+    assert issubclass(MicroBatcher, CoalescingQueue)
+    assert issubclass(UpdateBatcher, CoalescingQueue)
+
+
+def test_micro_batcher_old_surface_still_works():
+    mb = MicroBatcher(BatcherConfig(buckets=(4,), max_wait_ms=0.0))
+    futs = [mb.submit(np.full(3, i, np.float32)) for i in range(3)]
+    assert all(isinstance(f, RequestFuture) for f in futs)
+    assert len(mb) == 3
+    reqs = mb.next_batch(timeout=1.0)
+    assert [int(r.obs[0]) for r in reqs] == [0, 1, 2]
+    mb.close()
+    with pytest.raises(RuntimeError, match="batcher closed"):
+        mb.submit(np.zeros(3))
+    mb.reopen()
+    assert mb.submit(np.zeros(3)) is not None
+
+
+def test_update_batcher_old_surface_still_works():
+    ub = UpdateBatcher(BatcherConfig(buckets=(8,), max_wait_ms=0.0))
+    fut = ub.submit({"x": np.zeros((4, 2))})
+    assert isinstance(fut, RequestFuture)
+    (req,) = ub.next_batch(timeout=1.0)
+    assert req.rows == 4
+    with pytest.raises(ValueError, match="exceeds the top bucket"):
+        ub.submit({"x": np.zeros((9, 2))})
+
+
+# ---------------------------------------------------------------------------
+# de-duplication: engines are StreamEngine clients, lifecycle lives once
+# ---------------------------------------------------------------------------
+
+
+def test_engines_are_stream_engine_clients():
+    assert issubclass(PolicyEngine, StreamEngine)
+    assert issubclass(LearnerEngine, StreamEngine)
+    from repro.serve.lm import LMEngine
+    assert issubclass(LMEngine, StreamEngine)
+
+
+@pytest.mark.parametrize("cls", ["PolicyEngine", "LearnerEngine", "LMEngine"])
+def test_lifecycle_machinery_not_reimplemented(cls):
+    """The queue/thread/serve-loop methods must come from StreamEngine —
+    a subclass redefining one of these has re-grown duplicated code."""
+    from repro.serve.lm import LMEngine
+    engine = {"PolicyEngine": PolicyEngine, "LearnerEngine": LearnerEngine,
+              "LMEngine": LMEngine}[cls]
+    shared = ["start", "stop", "close", "health", "choose_mode",
+              "_serve_loop", "_reply", "_require_running", "_finish_call",
+              "__enter__", "__exit__"]
+    for name in shared:
+        assert name not in vars(engine), (
+            f"{cls}.{name} duplicates StreamEngine.{name}")
+    # queue machinery lives only in CoalescingQueue
+    for name in ("next_batch", "pop", "close", "drain", "reopen", "_enqueue"):
+        assert name not in vars(MicroBatcher)
+        assert name not in vars(UpdateBatcher)
+
+
+# ---------------------------------------------------------------------------
+# the continuous-batching drain primitive
+# ---------------------------------------------------------------------------
+
+
+def test_pop_drains_immediately_ignoring_deadline():
+    """`pop` must not wait out max_wait_ms — a free decode lane admits at
+    once; `next_batch` on the same queue still honors the deadline."""
+    mb = MicroBatcher(BatcherConfig(buckets=(8,), max_wait_ms=10_000.0))
+    for i in range(3):
+        mb.submit(np.full(2, i, np.float32))
+    t0 = time.perf_counter()
+    reqs = mb.pop(2)
+    assert time.perf_counter() - t0 < 1.0
+    assert [int(r.obs[0]) for r in reqs] == [0, 1]
+    assert len(mb) == 1
+    assert len(mb.pop(5)) == 1
+
+
+def test_pop_timeout_semantics():
+    mb = MicroBatcher(BatcherConfig(buckets=(8,)))
+    assert mb.pop(4) == []                       # non-blocking when empty
+    t0 = time.perf_counter()
+    assert mb.pop(4, timeout=0.05) == []         # bounded block when empty
+    assert 0.04 <= time.perf_counter() - t0 < 1.0
+    assert mb.pop(0) == []

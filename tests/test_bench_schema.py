@@ -27,7 +27,8 @@ def _load(name):
 @pytest.mark.parametrize("name", ["BENCH_fused_mlp.json",
                                   "BENCH_serve_policy.json",
                                   "BENCH_learner.json",
-                                  "BENCH_device_loop.json"])
+                                  "BENCH_device_loop.json",
+                                  "BENCH_serve_lm.json"])
 def test_checked_in_artifacts_validate(name):
     path = REPO / name
     assert path.exists(), f"{name} missing at repo root"
@@ -144,6 +145,30 @@ def test_device_loop_drift_fails():
                 bad, bench_schema.DEVICE_LOOP_SCHEMA
                 if bad.get("schema") != "fixar/device_loop_bench/v1"
                 else None)
+
+
+def test_serve_lm_drift_fails():
+    """The LM-serving artifact's contract: serving-style metrics (tokens/s,
+    TTFT percentiles, decode-batch occupancy), the sequential baseline it is
+    normalized against, and a ≥2-length prompt mix."""
+    good = _load("BENCH_serve_lm.json")
+    bench_schema.validate_report(good)
+    for mutate in (
+        lambda d: d.pop("engine"),
+        lambda d: d.pop("sequential"),
+        lambda d: d.pop("speedup_vs_sequential"),
+        lambda d: d["engine"].pop("ttft_p50_ms"),
+        lambda d: d["engine"].pop("decode_occupancy"),
+        lambda d: d["engine"].pop("decode_steps"),
+        lambda d: d["engine"]["mode_histogram"].pop("lm"),  # phase axis
+        lambda d: d["sequential"].pop("tokens_per_s_wall"),
+        lambda d: d["config"].update(prompt_lens=[5]),      # no length mix
+        lambda d: d["config"].update(lanes="4"),            # type drift
+    ):
+        bad = copy.deepcopy(good)
+        mutate(bad)
+        with pytest.raises(bench_schema.SchemaError):
+            bench_schema.validate_report(bad)
 
 
 def test_fallback_validator_agrees_with_jsonschema():
